@@ -1,0 +1,34 @@
+"""Paper Fig. 10-11 + §8.3.1: acceptance by policy and per profile."""
+from __future__ import annotations
+
+from repro.core.grmu import GRMU
+from repro.core.policies import POLICY_REGISTRY
+from repro.sim.engine import simulate
+from repro.workload.alibaba import TraceConfig, generate
+
+from .common import emit, timed
+
+SCALE = 1.0  # full paper-scale (1,213 hosts, 8,063 VMs)
+
+
+def run() -> None:
+    results = {}
+    for name, cls in list(POLICY_REGISTRY.items()) + [("GRMU", None)]:
+        cfg = TraceConfig(scale=SCALE, seed=1)
+        cluster, vms = generate(cfg)
+        pol = (GRMU(cluster, heavy_capacity_frac=0.3) if name == "GRMU"
+               else cls(cluster))
+        res, us = timed(simulate, cluster, pol, vms, repeats=1)
+        results[name] = res
+        s = res.summary()
+        pp = res.per_profile_acceptance_rate()
+        emit(f"acceptance.{name}", us,
+             f"acc={s['acceptance_rate']:.3f} "
+             f"7g={pp['7g.40gb']:.2f} 4g={pp['4g.20gb']:.2f} "
+             f"3g={pp['3g.20gb']:.2f} 2g={pp['2g.10gb']:.2f} "
+             f"1g10={pp['1g.10gb']:.2f} 1g5={pp['1g.5gb']:.2f}")
+    g = results["GRMU"].overall_acceptance_rate
+    m = results["MCC"].overall_acceptance_rate
+    f = results["FF"].overall_acceptance_rate
+    emit("acceptance.ratios", 0.0,
+         f"GRMU/MCC={g/m:.2f} (paper 1.22) GRMU/FF={g/f:.2f} (paper 1.39)")

@@ -1,0 +1,28 @@
+"""Beyond-paper: on-device vmapped trace replay vs sequential engine."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import batched as B
+from repro.core.grmu import GRMU
+from repro.sim.engine import simulate
+from repro.workload.alibaba import TraceConfig, generate
+
+from .common import emit, timed
+
+SCALE = 0.1
+
+
+def run() -> None:
+    cfg = TraceConfig(scale=SCALE, seed=1)
+    cluster, vms = generate(cfg)
+    pol = GRMU(cluster, heavy_capacity_frac=0.3, defrag=False)
+    _, us_py = timed(simulate, cluster, pol, vms, repeats=1)
+    emit("replay.python_engine", us_py, f"vms={len(vms)}")
+
+    cluster, vms = generate(cfg)
+    events = B.build_events(vms, cluster.num_gpus)
+    fracs = np.array([0.2, 0.25, 0.3, 0.35, 0.4])
+    out, us = timed(B.sweep_heavy_capacity, events, fracs, repeats=1)
+    emit("replay.vmapped_sweep_x5", us,
+         f"per_replay_us={us/len(fracs):.0f} accepted@0.3={int(out[2].sum())}")

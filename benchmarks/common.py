@@ -1,0 +1,20 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Run fn repeats times, return (result, best_us_per_call)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us:.1f},{derived}", flush=True)

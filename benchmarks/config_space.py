@@ -1,0 +1,19 @@
+"""Paper §5.1: configuration-space analysis (723/78/482 counts)."""
+from __future__ import annotations
+
+from repro.core.enumerate import summary
+
+from .common import emit, timed
+
+
+def run() -> None:
+    s, us = timed(summary)
+    emit("config_space.unique", us, f"configs={s['unique_configurations']}")
+    emit("config_space.terminal", us,
+         f"terminal={s['terminal_configurations']}")
+    emit("config_space.suboptimal", us,
+         f"suboptimal={s['suboptimal_configurations']} "
+         f"({100*s['suboptimal_configurations']//723}%)")
+    emit("config_space.default_reachable", us,
+         f"first_tie={s['default_reachable_first_tie']} "
+         f"all_ties={s['default_reachable_all_ties']} (paper: 248)")

@@ -1,0 +1,50 @@
+"""Beyond-paper: batched scoring throughput (tables vs kernels vs python).
+
+The datacenter-scale hot loop is scoring N GPUs per request; this table
+shows the per-call cost of (a) the object-level python scan, (b) the
+vectorized NumPy table gather (CPU production path), (c) the Pallas
+kernel in interpret mode (CPU correctness path; compiled on TPU).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import tables as T
+from repro.core.mig import GPU, gpu_from_free_mask, get_cc
+from repro.kernels.ops import cc_scores, frag_scores, mcc_scores
+
+from .common import emit, timed
+
+N = 8192  # ~datacenter GPU count
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    masks = rng.integers(0, 256, size=N).astype(np.uint8)
+    gpus = [gpu_from_free_mask(int(m)) for m in masks[:512]]
+
+    def python_scan():
+        return [get_cc(g.free) for g in gpus]
+    _, us = timed(python_scan)
+    emit("scoring.python_cc_512", us, f"per_gpu_ns={us/512*1000:.0f}")
+
+    def table_gather():
+        return T.CC_TABLE[masks]
+    _, us = timed(table_gather, repeats=10)
+    emit("scoring.table_cc_8192", us, f"per_gpu_ns={us/N*1000:.1f}")
+
+    jm = jnp.asarray(masks)
+    cc_scores(jm).block_until_ready()          # warm the jit cache
+    _, us = timed(lambda: cc_scores(jm).block_until_ready(), repeats=5)
+    emit("scoring.pallas_cc_8192_interpret", us, f"per_gpu_ns={us/N*1000:.1f}")
+
+    frag_scores(jm).block_until_ready()
+    _, us = timed(lambda: frag_scores(jm).block_until_ready(), repeats=5)
+    emit("scoring.pallas_frag_8192_interpret", us,
+         f"per_gpu_ns={us/N*1000:.1f}")
+
+    mcc_scores(jm, 3).block_until_ready()
+    _, us = timed(lambda: mcc_scores(jm, 3).block_until_ready(), repeats=5)
+    emit("scoring.pallas_mcc_8192_interpret", us,
+         f"per_gpu_ns={us/N*1000:.1f}")

@@ -1,0 +1,33 @@
+"""Render roofline_results.json as the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path="roofline_results.json"):
+    rows = json.load(open(path))
+    out = []
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | MODEL/HLO flops | roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip ({r['reason'][:40]}…) | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else
+                 "roofline_results.json"))

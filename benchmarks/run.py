@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [module ...]
+
+Modules: config_space (§5.1), basket_sweep (Fig. 6-8),
+consolidation_sweep (Fig. 9), acceptance (Fig. 10-11),
+active_hardware (Fig. 12 / Table 6), migrations (§8.3.3),
+ilp_gap (§6 oracle), kernel_throughput + batched_engine (beyond-paper).
+The roofline table is produced separately by repro.launch.roofline
+(needs a fresh process for the 512-device XLA flag).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "config_space",
+    "basket_sweep",
+    "consolidation_sweep",
+    "acceptance",
+    "active_hardware",
+    "migrations",
+    "ilp_gap",
+    "adaptive",
+    "kernel_throughput",
+    "batched_engine",
+]
+
+
+def main() -> None:
+    requested = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failed = []
+    for name in requested:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED modules: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""End-to-end driver (the paper's kind: serving/placement): GRMU admits a
+stream of inference requests onto pod slices, then the framework serves
+the admitted batch with a real model decode loop.
+
+    PYTHONPATH=src python examples/serve_with_grmu.py \
+        [--arch tinyllama-1.1b] [--requests 64] [--tokens 24]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "tinyllama-1.1b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    sys.exit(main(argv))

@@ -1,0 +1,36 @@
+"""End-to-end training driver: train a ~100M-param dense LM with the full
+stack (data pipeline -> scanned model -> AdamW -> atomic checkpoints),
+including kill-and-resume fault tolerance.
+
+CPU-sized default (a few minutes); scale flags up on real hardware:
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+    # stablelm-3b smoke config is a ~small dense llama-style stack; the
+    # full ~100M shape is reached with the width/depth flags of
+    # repro.launch.train on real hardware.
+    return train_main([
+        "--arch", "stablelm-3b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", str(args.batch),
+        "--seq", str(args.seq),
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "25",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Architecture configs (one module per assigned architecture).
+
+``get_config(name)`` returns the full published configuration;
+``get_smoke_config(name)`` returns a reduced same-family configuration for
+CPU smoke tests (small layers/width/experts, tiny vocab).
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = [
+    "qwen2_vl_2b",
+    "llama4_scout_17b_a16e",
+    "deepseek_v2_236b",
+    "deepseek_7b",
+    "mistral_nemo_12b",
+    "stablelm_3b",
+    "tinyllama_1_1b",
+    "whisper_base",
+    "rwkv6_3b",
+    "zamba2_7b",
+]
+
+# CLI ids use dashes (e.g. --arch qwen2-vl-2b).
+def _norm(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_norm(name)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_norm(name)}", __package__)
+    return mod.smoke_config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "all_configs"]

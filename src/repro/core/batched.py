@@ -1,0 +1,213 @@
+"""JAX-vectorized trace replay — the framework's on-device sweep engine.
+
+The Python engine (``repro.sim.engine``) is the faithful sequential
+reference.  This module replays the same event stream as a single
+``lax.scan`` over (arrival | departure) events with the cluster state held
+in arrays, so that:
+
+  * one replay jit-compiles end to end (no Python in the loop),
+  * ``jax.vmap`` over policy knobs (e.g. heavy-basket capacity) runs the
+    paper's §8.2 parameter sweeps as one device program,
+  * on TPU the per-event scoring can use the Pallas kernels instead of the
+    (CPU-friendly) 256-entry table gathers.
+
+Semantics matched to the Python engine (validated in
+tests/test_batched.py): within each 1 h bucket, departures are processed
+before arrivals; scans resolve ties by lowest globalIndex; GRMU here is
+the *Dual-Basket* configuration (defrag & consolidation off — the 'DB'
+point of Fig. 9), which is exactly the configuration whose acceptance the
+sweep benchmarks explore.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sim.cluster import VM, Cluster
+from . import tables as T
+
+# Policies supported by the batched engine.
+FF, BF, MCC, GRMU_DB = 0, 1, 2, 3
+
+_FITS = jnp.asarray(T.FITS_TABLE)                  # (256, 6) bool
+_ASSIGN_MASK = jnp.asarray(T.ASSIGN_MASK_TABLE)    # (256, 6) uint8
+_ASSIGN_START = jnp.asarray(T.ASSIGN_START_TABLE)  # (256, 6) int8
+_CC_AFTER = jnp.asarray(T.CC_AFTER_TABLE)          # (256, 6) int16
+_POP = jnp.asarray(T.POPCOUNT_TABLE)               # (256,)
+_SIZES = jnp.asarray(T.PROFILE_SIZE.astype(np.int32))  # (6,)
+
+HEAVY_PROFILE = 5  # PROFILES index of 7g.40gb
+
+
+@dataclasses.dataclass
+class EventTrace:
+    """Host-precomputed event stream: one row per (arrival|departure)."""
+    is_arrival: np.ndarray   # (E,) bool
+    vm_index: np.ndarray     # (E,) int32 (dense 0..N-1)
+    profile: np.ndarray      # (E,) int32
+    num_vms: int
+    num_gpus: int
+
+
+def build_events(vms: List[VM], num_gpus: int,
+                 step_hours: float = 1.0) -> EventTrace:
+    """Sort events the way the sequential engine does: by hour bucket,
+    departures first within a bucket, then chronological."""
+    rows = []
+    for dense_i, vm in enumerate(sorted(vms, key=lambda v: (v.arrival,
+                                                            v.vm_id))):
+        ab = int(vm.arrival // step_hours)
+        db = int(vm.departure // step_hours)
+        rows.append((ab, 1, vm.arrival, dense_i, _profile_idx(vm)))
+        rows.append((db, 0, vm.departure, dense_i, _profile_idx(vm)))
+    rows.sort(key=lambda r: (r[0], r[1], r[2], r[3]))
+    return EventTrace(
+        is_arrival=np.array([r[1] == 1 for r in rows], np.bool_),
+        vm_index=np.array([r[3] for r in rows], np.int32),
+        profile=np.array([r[4] for r in rows], np.int32),
+        num_vms=len(vms), num_gpus=num_gpus)
+
+
+def _profile_idx(vm: VM) -> int:
+    from .mig import PROFILE_INDEX
+    return PROFILE_INDEX[vm.profile.name]
+
+
+def _first_true(mask: jnp.ndarray) -> jnp.ndarray:
+    """Index of first True, or -1."""
+    idx = jnp.argmax(mask)
+    return jnp.where(mask.any(), idx, -1)
+
+
+def replay(events: EventTrace, policy: int,
+           heavy_capacity: Optional[jnp.ndarray] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Replay the trace under ``policy``.
+
+    Returns (accepted_per_profile (6,), active_gpu_integral ()).
+    ``heavy_capacity`` (scalar int32) is only used by GRMU_DB and may be a
+    traced value — vmap over it for the Fig. 6 sweep.
+    """
+    G, N = events.num_gpus, events.num_vms
+    if heavy_capacity is None:
+        heavy_capacity = jnp.int32(max(1, round(0.3 * G)))
+    light_capacity = jnp.int32(G) - heavy_capacity
+
+    ev = dict(
+        is_arrival=jnp.asarray(events.is_arrival),
+        vm_index=jnp.asarray(events.vm_index),
+        profile=jnp.asarray(events.profile),
+    )
+
+    # GRMU basket state: 0 = pool, 1 = heavy, 2 = light.
+    basket0 = jnp.zeros(G, jnp.int32)
+    if policy == GRMU_DB:
+        basket0 = basket0.at[0].set(1).at[1].set(2)
+
+    state0 = dict(
+        free=jnp.full((G,), 255, jnp.int32),
+        vm_gpu=jnp.full((N,), -1, jnp.int32),
+        vm_start=jnp.zeros((N,), jnp.int32),
+        accepted=jnp.zeros((6,), jnp.int32),
+        total=jnp.zeros((6,), jnp.int32),
+        basket=basket0,
+        active_integral=jnp.zeros((), jnp.float64)
+        if jax.config.read("jax_enable_x64") else jnp.zeros((), jnp.float32),
+    )
+
+    def arrival(state, vm_i, p):
+        free = state["free"]
+        fits = _FITS[free, p]
+        if policy == FF:
+            score_pick = _first_true(fits)
+        elif policy == BF:
+            left = jnp.where(fits, _POP[free] - _SIZES[p], 99)
+            pick = jnp.argmin(left)
+            score_pick = jnp.where(fits.any(), pick, -1)
+        elif policy == MCC:
+            cc = jnp.where(fits, _CC_AFTER[free, p], -1)
+            pick = jnp.argmax(cc)
+            score_pick = jnp.where(fits.any(), pick, -1)
+        else:  # GRMU_DB
+            heavy = p == HEAVY_PROFILE
+            want = jnp.where(heavy, 1, 2)
+            cap = jnp.where(heavy, heavy_capacity, light_capacity)
+            in_basket = state["basket"] == want
+            bfits = fits & in_basket
+            pick = _first_true(bfits)
+            # grow basket from pool (lowest index) if allowed
+            pool_free = state["basket"] == 0
+            grow_ok = ((pick < 0)
+                       & (jnp.sum(in_basket) <= cap)
+                       & pool_free.any())
+            grow_idx = _first_true(pool_free)
+            new_basket = jnp.where(
+                grow_ok,
+                state["basket"].at[grow_idx].set(want),
+                state["basket"])
+            state = dict(state, basket=new_basket)
+            # after growing, the new GPU is empty => profile fits
+            score_pick = jnp.where(pick >= 0, pick,
+                                   jnp.where(grow_ok, grow_idx, -1))
+        gpu = score_pick
+        ok = gpu >= 0
+        gg = jnp.maximum(gpu, 0)
+        mask = free[gg]
+        new_free = free.at[gg].set(
+            jnp.where(ok, _ASSIGN_MASK[mask, p].astype(jnp.int32), mask))
+        start = _ASSIGN_START[mask, p].astype(jnp.int32)
+        state = dict(
+            state,
+            free=new_free,
+            vm_gpu=state["vm_gpu"].at[vm_i].set(jnp.where(ok, gpu, -1)),
+            vm_start=state["vm_start"].at[vm_i].set(
+                jnp.where(ok, start, 0)),
+            accepted=state["accepted"].at[p].add(
+                jnp.where(ok, 1, 0).astype(jnp.int32)),
+            total=state["total"].at[p].add(1),
+        )
+        return state
+
+    def departure(state, vm_i, p):
+        gpu = state["vm_gpu"][vm_i]
+        ok = gpu >= 0
+        gg = jnp.maximum(gpu, 0)
+        size = _SIZES[p]
+        blocks = ((jnp.int32(1) << size) - 1) << state["vm_start"][vm_i]
+        new_free = state["free"].at[gg].set(
+            jnp.where(ok, state["free"][gg] | blocks, state["free"][gg]))
+        return dict(state, free=new_free,
+                    vm_gpu=state["vm_gpu"].at[vm_i].set(-1))
+
+    def step(state, e):
+        is_arr, vm_i, p = e["is_arrival"], e["vm_index"], e["profile"]
+        st_a = arrival(state, vm_i, p)
+        st_d = departure(state, vm_i, p)
+        new_state = jax.tree.map(
+            lambda a, d: jnp.where(is_arr, a, d), st_a, st_d)
+        active = jnp.sum(new_state["free"] != 255)
+        new_state = dict(new_state,
+                         active_integral=state["active_integral"]
+                         + active.astype(state["active_integral"].dtype))
+        return new_state, None
+
+    final, _ = jax.lax.scan(step, state0, ev)
+    return final["accepted"], final["active_integral"]
+
+
+def sweep_heavy_capacity(events: EventTrace,
+                         fracs: np.ndarray) -> np.ndarray:
+    """Fig. 6 on-device: vmap the GRMU_DB replay over basket capacities.
+    Returns (len(fracs), 6) accepted-per-profile."""
+    caps = jnp.asarray(np.maximum(
+        1, np.round(fracs * events.num_gpus)).astype(np.int32))
+    fn = jax.jit(jax.vmap(lambda c: replay(events, GRMU_DB, c)[0]))
+    return np.asarray(fn(caps))
+
+
+__all__ = ["EventTrace", "build_events", "replay", "sweep_heavy_capacity",
+           "FF", "BF", "MCC", "GRMU_DB"]

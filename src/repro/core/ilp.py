@@ -1,0 +1,286 @@
+"""The paper's multi-objective ILP (§6, Eqs. 3-26) via scipy HiGHS ``milp``.
+
+The paper states the full model is intractable at data-center scale and
+never benchmarks it; here it serves as a *ground-truth oracle* on small
+instances to validate GRMU and the baselines (tests/test_ilp.py) and to
+measure optimality gaps (benchmarks/ilp_gap.py).
+
+Encoding notes
+--------------
+* Start-block legality (Fig. 1) is captured exactly by the paper's
+  (beta_i, s_i) device: z_ijk = g_i * beta_i and z_ijk <= s_i reproduces
+  each profile's legal start set — e.g. 3g.20gb: multiples of 4 capped at
+  4 -> {0, 4}.
+* The three objectives are scalarized lexicographically with weights
+  W_accept >> W_hw >> W_mig (the paper's priority order).
+* alpha uses one binary per unordered VM pair per GPU (Eqs. 12-13 pair up).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy.optimize import Bounds, LinearConstraint, milp
+from scipy.sparse import csr_matrix
+
+from ..sim.cluster import VM, Cluster
+from .mig import NUM_BLOCKS, PROFILE_BY_NAME, Profile
+
+BIG_M = 64.0  # B: comfortably above any z (<=7) + g (<=8) and |h - H|
+
+
+@dataclasses.dataclass
+class ILPResult:
+    status: int
+    message: str
+    accepted: Dict[int, Tuple[int, int, int]]  # vm_id -> (pm, gpu, start)
+    rejected: List[int]
+    objective_accept: float
+    active_pms: int
+    active_gpus: int
+    migrations_pm: int
+    migrations_gpu: int
+
+    @property
+    def ok(self) -> bool:
+        return self.status == 0
+
+
+class MigILP:
+    """Builder for one placement round.
+
+    Parameters mirror the paper's notation: ``vms`` = N (new + resident),
+    ``pm_gpus`` = GPUs per PM (P_j), capacities C_j / R_j, previous
+    allocation (x', y', z') for residents, per-VM weights a_i / delta_i and
+    per-PM weights b_j.
+    """
+
+    def __init__(self, pm_gpus: Sequence[int],
+                 cpu_capacity: float = 1e9, ram_capacity: float = 1e9,
+                 w_accept: float = 1e4, w_hw: float = 1.0,
+                 w_mig: float = 1e2,
+                 gpu_kind: Optional[Sequence[Sequence[float]]] = None):
+        self.pm_gpus = list(pm_gpus)
+        self.M = len(self.pm_gpus)
+        self.cpu_capacity = cpu_capacity
+        self.ram_capacity = ram_capacity
+        self.w_accept, self.w_hw, self.w_mig = w_accept, w_hw, w_mig
+        # H_jk characteristic (100 = A100 per Table 5); heterogeneous OK.
+        self.H = (gpu_kind if gpu_kind is not None
+                  else [[100.0] * k for k in self.pm_gpus])
+        self.vms: List[VM] = []
+        self.delta: List[float] = []
+        self.prev: Dict[int, Tuple[int, int, int]] = {}  # vm_id->(j,k,z)
+        self.h: List[float] = []
+
+    def add_vm(self, vm: VM, resident_at: Optional[Tuple[int, int, int]]
+               = None, delta: float = 1.0, h: float = 100.0) -> None:
+        """resident_at=(pm, gpu, start) marks x'/y'/z'; None = new arrival
+        (delta forced to 0 per the paper)."""
+        self.vms.append(vm)
+        self.h.append(h)
+        if resident_at is None:
+            self.delta.append(0.0)
+        else:
+            self.delta.append(delta)
+            self.prev[vm.vm_id] = resident_at
+
+    # ------------------------------------------------------------------
+    def solve(self, time_limit: float = 60.0) -> ILPResult:
+        N, M = len(self.vms), self.M
+        K = self.pm_gpus
+        gpu_keys = [(j, k) for j in range(M) for k in range(K[j])]
+        G = len(gpu_keys)
+        gidx = {jk: t for t, jk in enumerate(gpu_keys)}
+        pairs = list(itertools.combinations(range(N), 2))
+
+        # ---- variable layout ------------------------------------------
+        # x[i,j], y[i,t], z[i,t], alpha[p,t], beta[i], phi[j], gamma[t],
+        # m[i,j], omega[i,t]
+        nx = N * M
+        ny = N * G
+        nz = N * G
+        na = len(pairs) * G
+        nb = N
+        nphi = M
+        ngam = G
+        nm = N * M
+        nom = N * G
+        off_x = 0
+        off_y = off_x + nx
+        off_z = off_y + ny
+        off_a = off_z + nz
+        off_b = off_a + na
+        off_phi = off_b + nb
+        off_gam = off_phi + nphi
+        off_m = off_gam + ngam
+        off_om = off_m + nm
+        nvar = off_om + nom
+
+        def X(i, j): return off_x + i * M + j
+        def Y(i, t): return off_y + i * G + t
+        def Z(i, t): return off_z + i * G + t
+        def A(p, t): return off_a + p * G + t
+        def Bv(i): return off_b + i
+        def PHI(j): return off_phi + j
+        def GAM(t): return off_gam + t
+        def Mv(i, j): return off_m + i * M + j
+        def OM(i, t): return off_om + i * G + t
+
+        g = np.array([v.profile.size for v in self.vms], dtype=float)
+        s = np.array([v.profile.last_start for v in self.vms], dtype=float)
+        a_w = np.array([v.weight for v in self.vms], dtype=float)
+        c_req = np.array([v.cpu for v in self.vms], dtype=float)
+        r_req = np.array([v.ram for v in self.vms], dtype=float)
+        H_flat = np.array([self.H[j][k] for (j, k) in gpu_keys], dtype=float)
+        h_vm = np.array(self.h, dtype=float)
+        delta = np.array(self.delta, dtype=float)
+
+        rows, cols, vals, lbs, ubs = [], [], [], [], []
+        row = 0
+
+        def add(coefs: List[Tuple[int, float]], lb: float, ub: float):
+            nonlocal row
+            for c, v in coefs:
+                rows.append(row), cols.append(c), vals.append(v)
+            lbs.append(lb), ubs.append(ub)
+            row += 1
+
+        INF = np.inf
+        # (6)/(7) CPU & RAM per PM
+        for j in range(M):
+            add([(X(i, j), c_req[i]) for i in range(N)], -INF,
+                self.cpu_capacity)
+            add([(X(i, j), r_req[i]) for i in range(N)], -INF,
+                self.ram_capacity)
+        # (8) one PM per VM; (9) one GPU per VM
+        for i in range(N):
+            add([(X(i, j), 1.0) for j in range(M)], -INF, 1.0)
+            add([(Y(i, t), 1.0) for t in range(G)], -INF, 1.0)
+        # (10) x_ij <= sum_k y_ijk ; (11) y_ijk <= x_ij
+        for i in range(N):
+            for j in range(M):
+                ts = [gidx[(j, k)] for k in range(K[j])]
+                add([(X(i, j), 1.0)] + [(Y(i, t), -1.0) for t in ts],
+                    -INF, 0.0)
+                for t in ts:
+                    add([(Y(i, t), 1.0), (X(i, j), -1.0)], -INF, 0.0)
+        # (12)/(13) non-overlap orderings per unordered pair per GPU
+        for p, (i, i2) in enumerate(pairs):
+            for t in range(G):
+                add([(Z(i, t), 1.0), (Y(i, t), g[i]), (Z(i2, t), -1.0),
+                     (A(p, t), -BIG_M)], -INF, 0.0)
+                add([(Z(i2, t), 1.0), (Y(i2, t), g[i2]), (Z(i, t), -1.0),
+                     (A(p, t), BIG_M)], -INF, BIG_M)
+        # (14)/(15) z = g*beta when y=1 ; (16) z <= s
+        for i in range(N):
+            for t in range(G):
+                add([(Z(i, t), 1.0), (Bv(i), -g[i]), (Y(i, t), BIG_M)],
+                    -INF, BIG_M)
+                add([(Z(i, t), -1.0), (Bv(i), g[i]), (Y(i, t), BIG_M)],
+                    -INF, BIG_M)
+                add([(Z(i, t), 1.0)], -INF, s[i])
+                # (17)/(18) GI/GPU compatibility
+                add([(Y(i, t), BIG_M)], -INF, BIG_M + H_flat[t] - h_vm[i])
+                add([(Y(i, t), BIG_M)], -INF, BIG_M + h_vm[i] - H_flat[t])
+        # (19) x <= phi ; (20) y <= gamma ; (21) gamma <= sum_i y
+        for i in range(N):
+            for j in range(M):
+                add([(X(i, j), 1.0), (PHI(j), -1.0)], -INF, 0.0)
+            for t in range(G):
+                add([(Y(i, t), 1.0), (GAM(t), -1.0)], -INF, 0.0)
+        for t in range(G):
+            add([(GAM(t), 1.0)] + [(Y(i, t), -1.0) for i in range(N)],
+                -INF, 0.0)
+        # (22)-(25) migration indicators vs previous state
+        xprev = np.zeros((N, M))
+        yprev = np.zeros((N, G))
+        for i, vm in enumerate(self.vms):
+            if vm.vm_id in self.prev:
+                j, k, _z = self.prev[vm.vm_id]
+                xprev[i, j] = 1.0
+                yprev[i, gidx[(j, k)]] = 1.0
+        for i in range(N):
+            for j in range(M):
+                add([(X(i, j), 1.0), (Mv(i, j), -1.0)], -INF, xprev[i, j])
+                add([(X(i, j), -1.0), (Mv(i, j), -1.0)], -INF, -xprev[i, j])
+            for t in range(G):
+                add([(Y(i, t), 1.0), (OM(i, t), -1.0)], -INF, yprev[i, t])
+                add([(Y(i, t), -1.0), (OM(i, t), -1.0)], -INF, -yprev[i, t])
+
+        Amat = csr_matrix((vals, (rows, cols)), shape=(row, nvar))
+        constraints = LinearConstraint(Amat, np.array(lbs), np.array(ubs))
+
+        # ---- objective (3)-(5) scalarized ------------------------------
+        cobj = np.zeros(nvar)
+        for i in range(N):
+            for j in range(M):
+                cobj[X(i, j)] -= self.w_accept * a_w[i]        # maximize
+                cobj[Mv(i, j)] += self.w_mig * delta[i]
+            for t in range(G):
+                cobj[OM(i, t)] += self.w_mig * delta[i]
+        for j in range(M):
+            cobj[PHI(j)] += self.w_hw  # b_j = 1 by default
+        for t in range(G):
+            cobj[GAM(t)] += self.w_hw
+
+        # ---- bounds & integrality --------------------------------------
+        lb = np.zeros(nvar)
+        ub = np.ones(nvar)
+        for i in range(N):
+            for t in range(G):
+                ub[Z(i, t)] = float(NUM_BLOCKS - 1)
+            ub[Bv(i)] = float(NUM_BLOCKS - 1)
+        integrality = np.ones(nvar)  # all integer (binaries via bounds)
+
+        res = milp(c=cobj, constraints=constraints,
+                   bounds=Bounds(lb, ub), integrality=integrality,
+                   options={"time_limit": time_limit, "mip_rel_gap": 1e-9})
+        if res.status != 0:
+            return ILPResult(res.status, res.message, {},
+                             [v.vm_id for v in self.vms], 0.0, 0, 0, 0, 0)
+
+        xv = res.x
+        accepted: Dict[int, Tuple[int, int, int]] = {}
+        rejectd: List[int] = []
+        for i, vm in enumerate(self.vms):
+            placed = False
+            for t, (j, k) in enumerate(gpu_keys):
+                if xv[Y(i, t)] > 0.5:
+                    accepted[vm.vm_id] = (j, k, int(round(xv[Z(i, t)])))
+                    placed = True
+                    break
+            if not placed:
+                rejectd.append(vm.vm_id)
+        mig_pm = int(round(sum(xv[Mv(i, j)] * delta[i] for i in range(N)
+                               for j in range(M))))
+        mig_gpu = int(round(sum(xv[OM(i, t)] * delta[i] for i in range(N)
+                                for t in range(G))))
+        return ILPResult(
+            0, res.message, accepted, rejectd,
+            objective_accept=float(sum(a_w[i] for i, vm in
+                                       enumerate(self.vms)
+                                       if vm.vm_id in accepted)),
+            active_pms=int(round(sum(xv[PHI(j)] for j in range(M)))),
+            active_gpus=int(round(sum(xv[GAM(t)] for t in range(G)))),
+            migrations_pm=mig_pm, migrations_gpu=mig_gpu)
+
+
+def validate_solution(result: ILPResult, vms: Sequence[VM],
+                      pm_gpus: Sequence[int]) -> bool:
+    """Check an ILP solution against the object-level MIG grammar."""
+    from .mig import GPU
+    gpus = {(j, k): GPU() for j in range(len(pm_gpus))
+            for k in range(pm_gpus[j])}
+    by_id = {v.vm_id: v for v in vms}
+    for vm_id, (j, k, z) in result.accepted.items():
+        profile = by_id[vm_id].profile
+        if z not in profile.start_blocks:
+            return False
+        gpus[(j, k)].assign_at(vm_id, profile, z)  # raises on overlap
+    return True
+
+
+__all__ = ["MigILP", "ILPResult", "validate_solution", "BIG_M"]

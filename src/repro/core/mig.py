@@ -1,0 +1,205 @@
+"""NVIDIA A100 MIG model: profiles, placement rules, CC metric, default policy.
+
+Implements §3 (Table 1, Fig. 1), §5 (Eq. 1-2, Algorithm 1) of the paper.
+
+A GPU is modeled from the memory-block perspective: 8 memory blocks
+(indices 0..7).  A GPU Instance (GI) profile occupies ``size`` contiguous
+blocks starting at one of its legal start blocks.  A GPU *configuration*
+``G`` is the set of FREE block indices (the paper's convention in Eq. 1-2:
+``S(G, p)`` is computed against free blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Profiles (Table 1 + Algorithm 1 start blocks + Table 5 parameters)
+# ---------------------------------------------------------------------------
+
+NUM_BLOCKS = 8
+FULL_GPU: FrozenSet[int] = frozenset(range(NUM_BLOCKS))
+
+
+@dataclasses.dataclass(frozen=True)
+class Profile:
+    name: str
+    size: int                     # memory blocks (g_i in Table 5)
+    compute: int                  # compute engines (Table 1)
+    start_blocks: Tuple[int, ...]  # legal starting blocks (Algorithm 1)
+
+    @property
+    def last_start(self) -> int:  # s_i in Table 5
+        return max(self.start_blocks)
+
+
+# Order matters: used consistently for iteration and for kernel templates.
+PROFILES: Tuple[Profile, ...] = (
+    Profile("1g.5gb", 1, 1, (0, 1, 2, 3, 4, 5, 6)),
+    Profile("1g.10gb", 2, 1, (0, 2, 4, 6)),
+    Profile("2g.10gb", 2, 2, (0, 2, 4)),
+    Profile("3g.20gb", 4, 3, (0, 4)),
+    Profile("4g.20gb", 4, 4, (0,)),
+    Profile("7g.40gb", 8, 7, (0,)),
+)
+
+PROFILE_BY_NAME: Dict[str, Profile] = {p.name: p for p in PROFILES}
+PROFILE_INDEX: Dict[str, int] = {p.name: i for i, p in enumerate(PROFILES)}
+
+# All (profile, start) "slots" — 7+4+3+2+1+1 = 18 of them.
+SLOTS: Tuple[Tuple[Profile, int], ...] = tuple(
+    (p, s) for p in PROFILES for s in p.start_blocks
+)
+NUM_SLOTS = len(SLOTS)  # 18
+
+# Block masks per slot, as python ints (bit b set == block b used).
+SLOT_MASKS: Tuple[int, ...] = tuple(
+    sum(1 << (s + i) for i in range(p.size)) for p, s in SLOTS
+)
+
+
+def blocks_of(profile: Profile, start: int) -> FrozenSet[int]:
+    """The block set occupied by ``profile`` placed at ``start``."""
+    return frozenset(range(start, start + profile.size))
+
+
+def mask_of(blocks: FrozenSet[int]) -> int:
+    m = 0
+    for b in blocks:
+        m |= 1 << b
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Configuration Capability (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def available_starts(free: FrozenSet[int], profile: Profile) -> List[int]:
+    """S(G, p): start blocks where ``profile`` fits entirely in free blocks."""
+    return [s for s in profile.start_blocks if blocks_of(profile, s) <= free]
+
+
+def get_cc(free: FrozenSet[int]) -> int:
+    """CC = sum over profiles of |S(G, p)|  (Eq. 1 / Algorithm 1 GetCC)."""
+    return sum(len(available_starts(free, p)) for p in PROFILES)
+
+
+# ---------------------------------------------------------------------------
+# GPU state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GPU:
+    """A MIG-enabled GPU: free blocks + placed (owner -> (profile, start))."""
+    global_index: int = 0
+    free: FrozenSet[int] = FULL_GPU
+    placements: Dict[object, Tuple[Profile, int]] = dataclasses.field(
+        default_factory=dict)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def is_empty(self) -> bool:
+        return len(self.placements) == 0
+
+    @property
+    def used_blocks(self) -> int:
+        return NUM_BLOCKS - len(self.free)
+
+    def cc(self) -> int:
+        return get_cc(self.free)
+
+    def fits(self, profile: Profile) -> bool:
+        return bool(available_starts(self.free, profile))
+
+    def copy(self) -> "GPU":
+        return GPU(self.global_index, self.free, dict(self.placements))
+
+    def half_full(self) -> bool:
+        """True if exactly the lower or upper half of blocks is occupied."""
+        used = FULL_GPU - self.free
+        return used == frozenset({0, 1, 2, 3}) or used == frozenset({4, 5, 6, 7})
+
+    def single_profile(self) -> bool:
+        return len(self.placements) == 1
+
+    # -- mutation ---------------------------------------------------------
+    def assign(self, owner: object, profile: Profile) -> Optional[int]:
+        """Algorithm 1 `Assign`: place ``profile`` at the start block that
+        maximizes the post-placement CC.  Ties: the NVIDIA policy scans start
+        blocks in ascending order and keeps the FIRST maximizer encountered,
+        matching the paper's §7.1 example: on an empty GPU the first 1g.5gb
+        lands on block 6 and a second one on block 4 (see test_mig.py).
+
+        Returns the chosen start block, or None if the profile doesn't fit.
+        """
+        best_start: Optional[int] = None
+        best_blocks: Optional[FrozenSet[int]] = None
+        max_cc = -1
+        for start in profile.start_blocks:
+            blocks = blocks_of(profile, start)
+            if blocks <= self.free:
+                cc = get_cc(self.free - blocks)
+                if cc > max_cc:
+                    best_start, best_blocks, max_cc = start, blocks, cc
+        if best_start is None:
+            return None
+        self.free = self.free - best_blocks
+        self.placements[owner] = (profile, best_start)
+        return best_start
+
+    def assign_at(self, owner: object, profile: Profile, start: int) -> None:
+        """Place at an explicit start (used by ILP solutions / migrations)."""
+        blocks = blocks_of(profile, start)
+        if not blocks <= self.free:
+            raise ValueError(
+                f"blocks {sorted(blocks)} not free in {sorted(self.free)}")
+        self.free = self.free - blocks
+        self.placements[owner] = (profile, start)
+
+    def release(self, owner: object) -> None:
+        profile, start = self.placements.pop(owner)
+        self.free = self.free | blocks_of(profile, start)
+
+    def free_mask(self) -> int:
+        return mask_of(self.free)
+
+
+def gpu_from_free_mask(free_mask: int, global_index: int = 0) -> GPU:
+    """Build a GPU with a given free-block bitmask (placements unknown)."""
+    free = frozenset(b for b in range(NUM_BLOCKS) if free_mask & (1 << b))
+    return GPU(global_index, free)
+
+
+# ---------------------------------------------------------------------------
+# Fragmentation metric (Algorithm 4, Function Fragmentation)
+# ---------------------------------------------------------------------------
+
+def fragmentation(gpu: GPU) -> float:
+    """Greedy per-profile packing residue, summed over applicable profiles.
+
+    For each profile with size <= |free blocks of the working copy|, pack as
+    many instances as possible (scanning start blocks in order), then add
+    (remaining free blocks / profile size).  NOTE: the working copy gpu'
+    carries over between profiles per Algorithm 4 (``gpu'`` is mutated in
+    the outer loop), and the size guard compares against the *current*
+    free-block count of gpu'.
+    """
+    free = set(gpu.free)
+    frag_val = 0.0
+    for profile in PROFILES:
+        if profile.size > len(free):
+            continue
+        for start in profile.start_blocks:
+            blocks = blocks_of(profile, start)
+            if blocks <= free:
+                free -= blocks
+        frag_val += len(free) / profile.size
+    return frag_val
+
+
+__all__ = [
+    "NUM_BLOCKS", "FULL_GPU", "Profile", "PROFILES", "PROFILE_BY_NAME",
+    "PROFILE_INDEX", "SLOTS", "NUM_SLOTS", "SLOT_MASKS", "blocks_of",
+    "mask_of", "available_starts", "get_cc", "GPU", "gpu_from_free_mask",
+    "fragmentation",
+]

@@ -1,0 +1,150 @@
+"""Baseline VM placement policies: FF, BF, MCC, MECC (paper §8.3, Algs. 6-7).
+
+Every policy operates at the upper placement level (host/GPU traversal);
+the block-level placement inside a chosen GPU is always NVIDIA's default
+CC-maximizing policy (Algorithm 1), which cannot be overridden.
+
+Scans are vectorized over the cluster's per-GPU free-mask vector using the
+precomputed tables of ``repro.core.tables`` — semantically identical to the
+paper's sequential scans (first-fit / first-maximizer order is preserved by
+``argmax`` returning the first extremum), but O(1) Python work per GPU.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..sim.cluster import Cluster, VM
+from .mig import PROFILES, PROFILE_INDEX
+from .tables import (CC_AFTER_TABLE, COUNTS_AFTER_TABLE, FITS_TABLE,
+                     POPCOUNT_TABLE)
+
+
+class PlacementPolicy:
+    """Interface used by the simulation engine."""
+    name = "base"
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.migrations = 0
+        self.intra_migrations = 0
+        self.inter_migrations = 0
+
+    # -- helpers ------------------------------------------------------------
+    def _profile_idx(self, vm: VM) -> int:
+        return PROFILE_INDEX[vm.profile.name]
+
+    def _fits_vec(self, vm: VM) -> np.ndarray:
+        """Per-GPU boolean: profile fits AND host has CPU/RAM headroom."""
+        fits = FITS_TABLE[self.cluster.free_masks, self._profile_idx(vm)]
+        if fits.any():
+            fits = fits & self.cluster.host_fits_vec(vm)
+        return fits
+
+    def _place_on(self, vm: VM, gpu_idx: int) -> bool:
+        gpu = self.cluster.gpu_index[int(gpu_idx)][1]
+        return self.cluster.place(vm, gpu) is not None
+
+    # -- interface -----------------------------------------------------------
+    def place(self, vm: VM) -> bool:
+        raise NotImplementedError
+
+    def on_arrival_observed(self, vm: VM, now: float) -> None:
+        """Called for every arrival (accepted or not) — MECC history."""
+
+    def on_step_end(self, now: float, rejected: List[VM]) -> None:
+        """Called once per time step after all arrivals are processed."""
+
+    def on_departure(self, vm: VM, now: float) -> None:
+        """Called after a VM's resources are released."""
+
+
+class FirstFit(PlacementPolicy):
+    """FF: scan hosts/GPUs in index order, place on the first fit."""
+    name = "FF"
+
+    def place(self, vm: VM) -> bool:
+        fits = self._fits_vec(vm)
+        if not fits.any():
+            return False
+        return self._place_on(vm, np.argmax(fits))
+
+
+class BestFit(PlacementPolicy):
+    """BF: place on the fitting GPU that minimizes leftover free blocks."""
+    name = "BF"
+
+    def place(self, vm: VM) -> bool:
+        fits = self._fits_vec(vm)
+        if not fits.any():
+            return False
+        left = POPCOUNT_TABLE[self.cluster.free_masks] - vm.profile.size
+        left = np.where(fits, left, 99)
+        return self._place_on(vm, np.argmin(left))
+
+
+class MaxCC(PlacementPolicy):
+    """MCC (Algorithm 6): tentative-assign on every GPU, keep the placement
+    with the highest post-assignment CC (first maximizer in index order)."""
+    name = "MCC"
+
+    def place(self, vm: VM) -> bool:
+        fits = self._fits_vec(vm)
+        if not fits.any():
+            return False
+        cc = CC_AFTER_TABLE[self.cluster.free_masks, self._profile_idx(vm)]
+        cc = np.where(fits, cc, -1)
+        return self._place_on(vm, np.argmax(cc))
+
+
+class MaxECC(PlacementPolicy):
+    """MECC (Algorithm 7): like MCC but each profile's slot count is
+    weighted by its empirical arrival probability over a look-back window
+    (n = 24 h gave the lowest prediction error in the paper)."""
+    name = "MECC"
+
+    def __init__(self, cluster: Cluster, window_hours: float = 24.0):
+        super().__init__(cluster)
+        self.window = window_hours
+        self.history: Deque[Tuple[float, int]] = deque()
+        self._counts = np.zeros(len(PROFILES), dtype=np.int64)
+
+    def on_arrival_observed(self, vm: VM, now: float) -> None:
+        pi = self._profile_idx(vm)
+        self.history.append((now, pi))
+        self._counts[pi] += 1
+        cutoff = now - self.window
+        while self.history and self.history[0][0] < cutoff:
+            _, old = self.history.popleft()
+            self._counts[old] -= 1
+
+    def _profile_probs(self) -> np.ndarray:
+        total = self._counts.sum()
+        if total == 0:
+            return np.full(len(PROFILES), 1.0 / len(PROFILES))
+        return self._counts / total
+
+    def place(self, vm: VM) -> bool:
+        fits = self._fits_vec(vm)
+        if not fits.any():
+            return False
+        probs = self._profile_probs()
+        # ECC = sum_p P(p) * |S(G_after, p)|, G_after from default Assign.
+        counts_after = COUNTS_AFTER_TABLE[self.cluster.free_masks,
+                                          self._profile_idx(vm)]
+        ecc = counts_after @ probs
+        ecc = np.where(fits, ecc, -1.0)
+        return self._place_on(vm, np.argmax(ecc))
+
+
+POLICY_REGISTRY = {
+    "FF": FirstFit,
+    "BF": BestFit,
+    "MCC": MaxCC,
+    "MECC": MaxECC,
+}
+
+__all__ = ["PlacementPolicy", "FirstFit", "BestFit", "MaxCC", "MaxECC",
+           "POLICY_REGISTRY"]

@@ -1,0 +1,101 @@
+"""Precomputed MIG tables over the 256-state free-mask space.
+
+A GPU's free blocks form an 8-bit mask, so every quantity the placement
+policies need — CC, per-profile fit, the default policy's chosen start
+block, post-assignment CC, the fragmentation metric — is a function of at
+most (mask, profile).  Precomputing them turns every pool scan into a NumPy
+gather over the cluster's free-mask vector; the Pallas kernels in
+``repro.kernels`` compute the same quantities directly from slot templates
+on-chip (tables don't fit the TPU's vector registers as gathers, but the
+18-slot popcount does).
+
+All tables are validated against the object-level implementation in
+``repro.core.mig`` (tests/test_tables.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .mig import (NUM_BLOCKS, NUM_SLOTS, PROFILES, SLOTS, SLOT_MASKS,
+                  blocks_of, fragmentation, get_cc, gpu_from_free_mask)
+
+NUM_MASKS = 1 << NUM_BLOCKS  # 256
+NUM_PROFILES = len(PROFILES)  # 6
+
+# Per-slot metadata as arrays (shared with kernels/ref.py).
+SLOT_MASK_ARR = np.array(SLOT_MASKS, dtype=np.uint8)          # (18,)
+SLOT_PROFILE = np.array([PROFILES.index(p) for p, _ in SLOTS],
+                        dtype=np.int8)                         # (18,)
+SLOT_START = np.array([s for _, s in SLOTS], dtype=np.int8)    # (18,)
+PROFILE_SIZE = np.array([p.size for p in PROFILES], dtype=np.int8)
+
+
+def _free_set(mask: int):
+    return frozenset(b for b in range(NUM_BLOCKS) if mask & (1 << b))
+
+
+def _build():
+    cc = np.zeros(NUM_MASKS, dtype=np.int16)
+    counts = np.zeros((NUM_MASKS, NUM_PROFILES), dtype=np.int16)
+    fits = np.zeros((NUM_MASKS, NUM_PROFILES), dtype=bool)
+    assign_start = np.full((NUM_MASKS, NUM_PROFILES), -1, dtype=np.int8)
+    assign_mask = np.zeros((NUM_MASKS, NUM_PROFILES), dtype=np.uint8)
+    cc_after = np.full((NUM_MASKS, NUM_PROFILES), -1, dtype=np.int16)
+    frag = np.zeros(NUM_MASKS, dtype=np.float32)
+    popcount = np.zeros(NUM_MASKS, dtype=np.int16)
+
+    for mask in range(NUM_MASKS):
+        free = _free_set(mask)
+        popcount[mask] = len(free)
+        cc[mask] = get_cc(free)
+        frag[mask] = fragmentation(gpu_from_free_mask(mask))
+        for pi, p in enumerate(PROFILES):
+            n = 0
+            best_start, max_cc = -1, -1
+            for start in p.start_blocks:
+                blocks = blocks_of(p, start)
+                if blocks <= free:
+                    n += 1
+                    c = get_cc(free - blocks)
+                    if c > max_cc:
+                        best_start, max_cc = start, c
+            counts[mask, pi] = n
+            fits[mask, pi] = n > 0
+            if best_start >= 0:
+                assign_start[mask, pi] = best_start
+                bm = 0
+                for b in blocks_of(p, best_start):
+                    bm |= 1 << b
+                assign_mask[mask, pi] = mask & ~bm
+                cc_after[mask, pi] = max_cc
+
+    # counts_after[mask, placed_profile, counted_profile]
+    counts_after = np.zeros((NUM_MASKS, NUM_PROFILES, NUM_PROFILES),
+                            dtype=np.int16)
+    for mask in range(NUM_MASKS):
+        for pi in range(NUM_PROFILES):
+            if fits[mask, pi]:
+                counts_after[mask, pi] = counts[assign_mask[mask, pi]]
+
+    return dict(CC=cc, COUNTS=counts, FITS=fits, ASSIGN_START=assign_start,
+                ASSIGN_MASK=assign_mask, CC_AFTER=cc_after, FRAG=frag,
+                POPCOUNT=popcount, COUNTS_AFTER=counts_after)
+
+
+_T = _build()
+CC_TABLE: np.ndarray = _T["CC"]                  # (256,)
+COUNTS_TABLE: np.ndarray = _T["COUNTS"]          # (256, 6)  |S(G,p)|
+FITS_TABLE: np.ndarray = _T["FITS"]              # (256, 6)
+ASSIGN_START_TABLE: np.ndarray = _T["ASSIGN_START"]  # (256, 6)
+ASSIGN_MASK_TABLE: np.ndarray = _T["ASSIGN_MASK"]    # (256, 6)
+CC_AFTER_TABLE: np.ndarray = _T["CC_AFTER"]      # (256, 6)
+FRAG_TABLE: np.ndarray = _T["FRAG"]              # (256,)
+POPCOUNT_TABLE: np.ndarray = _T["POPCOUNT"]      # (256,)
+COUNTS_AFTER_TABLE: np.ndarray = _T["COUNTS_AFTER"]  # (256, 6, 6)
+
+__all__ = [
+    "NUM_MASKS", "NUM_PROFILES", "SLOT_MASK_ARR", "SLOT_PROFILE",
+    "SLOT_START", "PROFILE_SIZE", "CC_TABLE", "COUNTS_TABLE", "FITS_TABLE",
+    "ASSIGN_START_TABLE", "ASSIGN_MASK_TABLE", "CC_AFTER_TABLE",
+    "FRAG_TABLE", "POPCOUNT_TABLE", "COUNTS_AFTER_TABLE",
+]

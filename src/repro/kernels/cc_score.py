@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: batched Configuration Capability scoring (Eq. 1).
+
+Input is a 2D tile of int32 free-block masks; the 18 slot templates are
+compile-time constants, so the body is a fully unrolled chain of VPU
+bitwise-AND + compare + add ops — no gathers, no tables, perfectly
+vectorized across the (sublane, lane) tile.  This is the TPU-native
+adaptation of the CPU-side 256-entry lookup table (``core.tables``):
+a table gather would serialize on the VPU, whereas 18 unrolled mask
+compares stream at full lane width.
+
+Block shape: (BLOCK_ROWS, 128) int32 — 128 lanes is the v5e native lane
+width; BLOCK_ROWS=64 keeps the working set at 64*128*4B = 32 KiB in +
+32 KiB out, far under the ~16 MiB VMEM budget, letting the pipeline
+double-buffer freely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.mig import SLOT_MASKS
+
+BLOCK_ROWS = 64
+LANES = 128
+
+
+def _cc_kernel(mask_ref, out_ref):
+    m = mask_ref[...]
+    cc = jnp.zeros_like(m)
+    for sm in SLOT_MASKS:          # 18 compile-time-unrolled templates
+        sm = int(sm)
+        cc = cc + ((m & sm) == sm).astype(jnp.int32)
+    out_ref[...] = cc
+
+
+def cc_pallas(masks2d: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """masks2d: (R, 128) int32, R % BLOCK_ROWS == 0. Returns (R, 128) int32."""
+    rows, lanes = masks2d.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, (rows, lanes)
+    grid = (rows // BLOCK_ROWS,)
+    return pl.pallas_call(
+        _cc_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(masks2d)
+
+
+__all__ = ["cc_pallas", "BLOCK_ROWS", "LANES"]

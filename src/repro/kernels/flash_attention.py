@@ -1,0 +1,133 @@
+"""Pallas TPU flash attention (fwd) — the prefill/train hot spot.
+
+Motivation (see EXPERIMENTS.md §Perf): the pure-JAX chunked attention in
+``repro.models.layers.flash_attention`` keeps the compiled FLOPs at
+~S^2/2 but still round-trips the (q_chunk, k_chunk) score tile through
+HBM between the two matmuls — at 32k context the HLO-bytes term is
+dominated by those tiles.  This kernel keeps the score tile, the online-
+softmax statistics, and the output accumulator in VMEM scratch across the
+whole key loop; only q/k/v tiles stream from HBM.
+
+Layout: q (B*H, Sq, hd), k/v (B*KV, Sk, hd); grid (BH, nq, nk) with the
+key dimension innermost ("arbitrary" semantics — same output block
+revisited, accumulators live in scratch).  GQA is handled in the k/v
+index_map (kv head = h // G) — no expanded K/V materialization at all,
+which also removes the expand-backward all-reduce of the jnp path.
+
+Causality is enforced by masking; the wrapper trims fully-masked key
+blocks from the grid when the shape allows (rectangular grids only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+f32 = jnp.float32
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: Optional[int],
+               block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(f32)                     # (bq, hd)
+    k = k_ref[0].astype(f32)                     # (bk, hd)
+    v = v_ref[0].astype(f32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=f32) * scale
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=f32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).  Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    def kv_index(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * KV + h // G, ki, 0)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            # VMEM accumulators persist across the innermost (k) grid dim
+            pltpu.VMEM((block_q, hd), f32),
+            pltpu.VMEM((block_q, 1), f32),
+            pltpu.VMEM((block_q, 1), f32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+__all__ = ["flash_attention_pallas"]

@@ -1,0 +1,78 @@
+"""Public jit'd wrappers for the MIG scoring kernels.
+
+Handles 1D->2D tiling (pad to a whole number of (BLOCK_ROWS, 128) tiles),
+kernel dispatch, and un-padding.  ``interpret`` defaults to True when no
+TPU is present so the same API runs everywhere; on TPU the compiled
+pallas_call path is used.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cc_score import BLOCK_ROWS, LANES, cc_pallas
+from .frag_score import frag_pallas
+from .policy_score import ecc_score_pallas, mcc_score_pallas
+
+_TILE = BLOCK_ROWS * LANES
+
+
+def _default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def _to_tiles(masks: jax.Array):
+    """(N,) int -> ((R,128) int32, N). Pads with 0 (empty-free mask)."""
+    n = masks.shape[0]
+    padded = ((n + _TILE - 1) // _TILE) * _TILE
+    flat = jnp.zeros(padded, jnp.int32).at[:n].set(masks.astype(jnp.int32))
+    return flat.reshape(-1, LANES), n
+
+
+def _from_tiles(out2d: jax.Array, n: int):
+    return out2d.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cc_scores(masks: jax.Array, *, interpret: bool | None = None):
+    """Batched CC (Eq. 1) for (N,) uint8/int32 free masks -> (N,) int32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles, n = _to_tiles(masks)
+    return _from_tiles(cc_pallas(tiles, interpret=interpret), n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frag_scores(masks: jax.Array, *, interpret: bool | None = None):
+    """Batched Algorithm-4 fragmentation -> (N,) float32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles, n = _to_tiles(masks)
+    return _from_tiles(frag_pallas(tiles, interpret=interpret), n)
+
+
+@functools.partial(jax.jit, static_argnames=("profile_idx", "interpret"))
+def mcc_scores(masks: jax.Array, profile_idx: int, *,
+               interpret: bool | None = None):
+    """Batched Algorithm-6 scores (post-assign CC; -1 = no fit)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles, n = _to_tiles(masks)
+    return _from_tiles(
+        mcc_score_pallas(tiles, profile_idx, interpret=interpret), n)
+
+
+@functools.partial(jax.jit, static_argnames=("profile_idx", "interpret"))
+def ecc_scores(masks: jax.Array, profile_idx: int, probs: jax.Array, *,
+               interpret: bool | None = None):
+    """Batched Algorithm-7 scores. probs: (6,) f32 arrival probabilities."""
+    interpret = _default_interpret() if interpret is None else interpret
+    tiles, n = _to_tiles(masks)
+    probs_row = jnp.zeros((1, LANES), jnp.float32).at[0, :6].set(
+        probs.astype(jnp.float32))
+    return _from_tiles(
+        ecc_score_pallas(tiles, profile_idx, probs_row,
+                         interpret=interpret), n)
+
+
+__all__ = ["cc_scores", "frag_scores", "mcc_scores", "ecc_scores"]

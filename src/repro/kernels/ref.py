@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the MIG scoring kernels.
+
+Direct slot-template math over uint8 free-block masks (bit b set == block b
+free) — no lookup tables, so these also serve as the TPU-native reference
+semantics the Pallas kernels implement:
+
+  * ``cc_ref``       — Configuration Capability (paper Eq. 1)
+  * ``frag_ref``     — fragmentation metric (Algorithm 4)
+  * ``mcc_score_ref``— post-default-assign CC per GPU (Algorithm 6 inner loop)
+  * ``ecc_score_ref``— expectation-weighted CC (Algorithm 7 inner loop)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.mig import PROFILES, SLOTS, SLOT_MASKS
+
+NUM_SLOTS = len(SLOTS)       # 18
+NUM_PROFILES = len(PROFILES)  # 6
+
+# Static template metadata (python ints — baked into traced code).
+_SLOT_MASKS = tuple(int(m) for m in SLOT_MASKS)
+_SLOT_PROFILE = tuple(PROFILES.index(p) for p, _ in SLOTS)
+_PROFILE_SIZES = tuple(p.size for p in PROFILES)
+# per profile: list of slot masks (its legal placements)
+_PROFILE_SLOT_MASKS = tuple(
+    tuple(int(_SLOT_MASKS[t]) for t in range(NUM_SLOTS)
+          if _SLOT_PROFILE[t] == pi)
+    for pi in range(NUM_PROFILES))
+
+
+def _popcount8(x: jnp.ndarray) -> jnp.ndarray:
+    """Population count of the low 8 bits."""
+    x = x.astype(jnp.int32)
+    total = jnp.zeros_like(x)
+    for b in range(8):
+        total = total + ((x >> b) & 1)
+    return total
+
+
+def cc_ref(masks: jnp.ndarray) -> jnp.ndarray:
+    """CC(G) = number of (profile, start) slots placeable in free mask G."""
+    m = masks.astype(jnp.int32)
+    cc = jnp.zeros_like(m)
+    for sm in _SLOT_MASKS:
+        cc = cc + ((m & sm) == sm).astype(jnp.int32)
+    return cc
+
+
+def frag_ref(masks: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 4's Fragmentation: greedily pack each profile in order
+    (mutating the working copy across profiles); after each applicable
+    profile add (remaining free blocks / profile size)."""
+    free = masks.astype(jnp.int32)
+    frag = jnp.zeros(free.shape, jnp.float32)
+    for pi in range(NUM_PROFILES):
+        size = _PROFILE_SIZES[pi]
+        applies = _popcount8(free) >= size
+        for sm in _PROFILE_SLOT_MASKS[pi]:
+            take = (free & sm) == sm
+            free = jnp.where(take, free & ~sm, free)
+        frag = frag + jnp.where(
+            applies, _popcount8(free).astype(jnp.float32) / size, 0.0)
+    return frag
+
+
+def mcc_score_ref(masks: jnp.ndarray, profile_idx: int) -> jnp.ndarray:
+    """Best post-assignment CC over the profile's legal starts (the default
+    policy chooses exactly this maximum), -1 where the profile can't fit."""
+    m = masks.astype(jnp.int32)
+    best = jnp.full(m.shape, -1, jnp.int32)
+    for sm in _PROFILE_SLOT_MASKS[profile_idx]:
+        fits = (m & sm) == sm
+        cc_after = cc_ref(m & ~sm)
+        best = jnp.where(fits, jnp.maximum(best, cc_after), best)
+    return best
+
+
+def ecc_score_ref(masks: jnp.ndarray, profile_idx: int,
+                  probs: jnp.ndarray) -> jnp.ndarray:
+    """ECC after placing ``profile_idx`` with the default policy:
+    sum_p P(p) * |S(G_after, p)| at the CC-maximizing (first-max) start;
+    -1.0 where the profile can't fit."""
+    m = masks.astype(jnp.int32)
+    best_cc = jnp.full(m.shape, -1, jnp.int32)
+    best_after = m  # placeholder; refined below
+    for sm in _PROFILE_SLOT_MASKS[profile_idx]:
+        fits = (m & sm) == sm
+        after = m & ~sm
+        cc_after = jnp.where(fits, cc_ref(after), -1)
+        better = cc_after > best_cc   # strict: keeps FIRST maximizer
+        best_after = jnp.where(better, after, best_after)
+        best_cc = jnp.maximum(best_cc, cc_after)
+    ecc = jnp.zeros(m.shape, jnp.float32)
+    for pi in range(NUM_PROFILES):
+        count = jnp.zeros(m.shape, jnp.int32)
+        for sm in _PROFILE_SLOT_MASKS[pi]:
+            count = count + ((best_after & sm) == sm).astype(jnp.int32)
+        ecc = ecc + probs[pi] * count.astype(jnp.float32)
+    return jnp.where(best_cc >= 0, ecc, -1.0)
+
+
+__all__ = ["cc_ref", "frag_ref", "mcc_score_ref", "ecc_score_ref",
+           "NUM_SLOTS", "NUM_PROFILES"]

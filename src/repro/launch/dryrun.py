@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape)
+# on the production meshes; record memory/cost analysis + collective bytes.
+#
+# MUST be the entry point of a fresh process (the XLA_FLAGS line above runs
+# before any other import so the 512 placeholder host devices exist before
+# jax locks the device count).
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun \
+#         [--arch qwen2-vl-2b] [--shape train_4k] [--multi-pod] [--all]
+#         [--json out.json] [--micro N]
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..models.config import SHAPES
+from ..models import registry as R
+from ..serve import engine as serve_engine
+from .mesh import make_production_mesh
+from . import sharding as SH
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes extraction from HLO text (§Roofline)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all arrays in an HLO shape string like
+    'bf16[16,1024]' or '(f32[8,128], u32[])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, by op kind."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        # result shape is on the LHS: '%name = <shape> all-gather(...)'
+        eq = line.find("=")
+        if eq < 0:
+            continue
+        rhs = line[eq + 1:]
+        kindpos = rhs.find(m.group(1))
+        shape_str = rhs[:kindpos] if kindpos > 0 else rhs
+        b = _shape_bytes(shape_str)
+        kind = m.group(1)
+        if line.startswith("ROOT"):
+            pass
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline model (TPU v5e targets per the brief)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, one direction)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> Dict[str, float]:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant}
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _batch_shardings(mesh, specs, cfg, axes=None):
+    """Input shardings for a batch-specs dict."""
+    def shard_one(path, s):
+        if path == "mrope_positions":          # (3, B, S): batch dim 1
+            return NamedSharding(mesh,
+                                 SH.batch_pspec(mesh, len(s.shape), 1, axes))
+        return SH.batch_sharding(mesh, s, batch_dim=0, axes=axes)
+    return {k: (jax.tree.map(
+                    lambda s: SH.batch_sharding(mesh, s, axes=axes), v)
+                if isinstance(v, dict) else shard_one(k, v))
+            for k, v in specs.items()}
+
+
+def _cache_shardings(mesh, cfg, cache_specs):
+    axes = serve_engine.cache_axes(cfg, model_size=mesh.shape["model"])
+    return {
+        k: NamedSharding(mesh, SH.logical_to_pspec(
+            axes[k], tuple(cache_specs[k].shape), mesh))
+        for k in cache_specs
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               n_micro: int = 1,
+               rules: Optional[Dict[str, Any]] = None,
+               donate: bool = True,
+               cfg_override=None,
+               cost_unroll: bool = False,
+               batch_axes_override=None,
+               head_axes_override="model"):
+    """Lower + compile one (arch x shape x mesh) cell.  Returns dict of
+    dry-run artifacts (memory analysis, cost analysis, collective bytes,
+    roofline terms).
+
+    ``cfg_override``: depth-reduced config used by the roofline runner's
+    base + L*per_layer extrapolation.  ``cost_unroll``: unroll structural
+    scans so cost_analysis counts every iteration (see models/flags.py).
+    """
+    from ..models import flags
+    from ..models.transformer import param_axes
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = R.cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules or SH.DEFAULT_RULES
+    p_axes = param_axes(cfg)
+    p_specs = R.abstract_params(cfg)
+    p_shard = SH.tree_shardings(p_axes, p_specs, mesh, rules)
+
+    step = R.make_step(cfg, shape, n_micro=n_micro)
+    in_specs = R.input_specs(cfg, shape_name)
+    flags.COST_UNROLL = cost_unroll
+    if batch_axes_override is not None:
+        dp_axes = tuple(a for a in batch_axes_override
+                        if a in mesh.axis_names)
+    else:
+        dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    # batch=1 cells (long_500k) can't shard the batch dim — replicate it
+    # but still pin heads on the model axis.
+    flags.BATCH_AXES = dp_axes if shape.global_batch % dp == 0 else None
+    flags.HEAD_AXES = head_axes_override
+    heads_ok = (head_axes_override is not None
+                and cfg.n_kv_heads % mesh.shape["model"] == 0)
+    flags.KV_HEAD_AXES = "model" if heads_ok else None
+    # MLA caches the (head-free) latent -> always sequence-shard; GQA
+    # archs sequence-shard only when kv heads can't cover the model axis.
+    flags.KV_SEQ_AXES = ("model" if (cfg.family == "mla_moe"
+                                     or not heads_ok) else None)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            _, opt_specs = R.abstract_train_state(cfg)
+            opt_shard = type(opt_specs)(
+                step=NamedSharding(mesh, PS()),
+                m=SH.tree_shardings(p_axes, opt_specs.m, mesh, rules),
+                v=SH.tree_shardings(p_axes, opt_specs.v, mesh, rules))
+            batch_shard = _batch_shardings(mesh, in_specs, cfg, dp_axes)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, opt_shard, batch_shard),
+                out_shardings=(p_shard, opt_shard, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(p_specs, opt_specs, in_specs)
+        elif shape.kind == "prefill":
+            batch_shard = _batch_shardings(mesh, in_specs, cfg, dp_axes)
+            jitted = jax.jit(step, in_shardings=(p_shard, batch_shard))
+            lowered = jitted.lower(p_specs, in_specs)
+        else:  # decode
+            cache_shard = _cache_shardings(mesh, cfg, in_specs["cache"])
+            batch_shard = {
+                "cache": cache_shard,
+                "tokens": SH.batch_sharding(mesh, in_specs["tokens"],
+                                            axes=dp_axes),
+                "pos": SH.batch_sharding(mesh, in_specs["pos"],
+                                         axes=dp_axes),
+            }
+            jitted = jax.jit(step, in_shardings=(p_shard, batch_shard),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(p_specs, in_specs)
+        compiled = lowered.compile()
+    flags.COST_UNROLL = False
+    flags.BATCH_AXES = None
+    flags.HEAD_AXES = None
+    flags.KV_HEAD_AXES = None
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = {k: v * chips for k, v in collective_bytes(hlo).items()}
+    coll_total = sum(coll.values())
+
+    # cost_analysis reports PER-PARTITION numbers after GSPMD (verified in
+    # tests/test_roofline.py) — scale to global so the brief's
+    # "/(chips * peak)" roofline formulas apply.
+    flops = float(cost.get("flops", 0.0)) * chips
+    hbm_bytes = float(cost.get("bytes accessed", 0.0)) * chips
+    terms = roofline_terms(flops, hbm_bytes, coll_total, chips)
+    mf = R.model_flops(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "skipped": False,
+        "compile_s": round(compile_s, 1),
+        "hlo_flops": flops,
+        "hlo_bytes": hbm_bytes,
+        "collective_bytes": coll_total,
+        "collectives": coll,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / flops) if flops else 0.0,
+        "per_device_bytes": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        **terms,
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    r = lower_cell(arch, shape, multi_pod=mp,
+                                   n_micro=args.micro)
+                except Exception as e:  # noqa: BLE001 — report, don't die
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "error": f"{type(e).__name__}: {e}"}
+                results.append(r)
+                status = ("SKIP" if r.get("skipped")
+                          else ("ERR " if "error" in r else "OK  "))
+                extra = (r.get("reason") or r.get("error", "") or
+                         f"dom={r.get('dominant')} "
+                         f"c={r.get('compute_s', 0):.4f}s "
+                         f"m={r.get('memory_s', 0):.4f}s "
+                         f"x={r.get('collective_s', 0):.4f}s "
+                         f"peak={_fmt_bytes(r['per_device_bytes']['peak'])}")
+                print(f"[{status}] {arch:24s} {shape:12s} "
+                      f"{r['mesh']:8s} {extra}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if "error" in r]
+    return 1 if bad else 0
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "?"
+    return f"{b/2**30:.2f}GiB"
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""Elastic rescaling: re-shard a checkpoint onto a different mesh.
+
+Node-failure path at scale: when a pod (or slice) drops out, the job
+restarts with fewer devices; parameters are pure data, so rescaling is a
+re-layout — load the host-side checkpoint and jit-commit it to the new
+mesh's shardings.  The reverse (scale-up) is identical.  GRMU's
+consolidation doubles as the *scheduler-side* half of this story: it
+drains work off a failing row before the restart (see core/podsched.py).
+
+``plan_rescale`` is pure-metadata (works under the dry-run's fake
+devices); ``apply_rescale`` commits real arrays on the current devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import param_axes
+from . import sharding as SH
+from .mesh import make_mesh_for_devices
+
+
+def plan_rescale(cfg: ModelConfig, param_shapes: Any, n_devices: int,
+                 model_parallel: int = 16) -> Tuple[Any, Any]:
+    """Returns (mesh, shardings) for the params on a resized device set."""
+    mesh = make_mesh_for_devices(n_devices, model_parallel)
+    axes = param_axes(cfg)
+    shardings = SH.tree_shardings(axes, param_shapes, mesh)
+    return mesh, shardings
+
+
+def apply_rescale(tree: Any, shardings: Any) -> Any:
+    """Commit arrays to the new shardings (device_put re-layout)."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def validate_divisibility(cfg: ModelConfig, n_devices: int,
+                          model_parallel: int = 16) -> Dict[str, bool]:
+    """Quick feasibility check before committing to a rescale."""
+    mesh = make_mesh_for_devices(n_devices, model_parallel)
+    out = {
+        "d_model_by_dp": cfg.d_model % max(1, mesh.shape.get("data", 1)) == 0,
+        "heads_by_tp": (cfg.n_heads * cfg.resolved_head_dim) %
+        mesh.shape.get("model", 1) == 0,
+        "dff_by_tp": cfg.d_ff % mesh.shape.get("model", 1) == 0,
+    }
+    return out
+
+
+__all__ = ["plan_rescale", "apply_rescale", "validate_divisibility"]

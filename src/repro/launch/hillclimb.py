@@ -1,0 +1,123 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# §Perf hillclimb driver: evaluate named optimization variants of one
+# (arch x shape) cell and print the roofline-term deltas.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --arch tinyllama-1.1b \
+#       --shape train_4k [--variants baseline,no_fsdp,remat_dots,...]
+#
+# Variants compose orthogonal knobs:
+#   * sharding rules  : baseline FSDP / embed replicated over data
+#   * remat policy    : full / dots-saveable / none
+#   * microbatching   : n_micro grad-accum splits
+
+import argparse
+import json
+import sys
+
+from ..configs import get_config
+from ..models import flags
+from ..models.config import SHAPES
+from . import sharding as SH
+from .roofline import roofline_cell
+
+NO_FSDP_RULES = dict(SH.DEFAULT_RULES, embed=None)
+FSDP_DATA_ONLY = dict(SH.DEFAULT_RULES, embed="data")
+# pure FSDP/DP: no tensor parallelism at all; params fully sharded over
+# all 256 devices, batch sharded over both mesh axes.  The right layout
+# for small-activation-footprint models where TP activation all-reduces
+# dominate the collective term.
+PURE_DP_RULES = {k: None for k in SH.DEFAULT_RULES}
+PURE_DP_RULES.update(embed=("pod", "data", "model"),
+                     batch=("pod", "data", "model"))
+
+# name -> dict(rules, remat, micro, batch_axes, head_axes)
+VARIANTS = {
+    "baseline":       dict(),
+    "no_fsdp":        dict(rules=NO_FSDP_RULES),
+    "remat_dots":     dict(remat="dots"),
+    "remat_none":     dict(remat="none"),
+    "micro4":         dict(micro=4),
+    "micro16":        dict(micro=16),
+    "no_fsdp+dots":   dict(rules=NO_FSDP_RULES, remat="dots"),
+    "no_fsdp+none":   dict(rules=NO_FSDP_RULES, remat="none"),
+    "pure_dp":        dict(rules=PURE_DP_RULES,
+                           batch_axes=("pod", "data", "model"),
+                           head_axes=None),
+    "pure_dp+dots":   dict(rules=PURE_DP_RULES,
+                           batch_axes=("pod", "data", "model"),
+                           head_axes=None, remat="dots"),
+    "pure_dp+none":   dict(rules=PURE_DP_RULES,
+                           batch_axes=("pod", "data", "model"),
+                           head_axes=None, remat="none"),
+    "pure_dp+none+micro4": dict(rules=PURE_DP_RULES,
+                                batch_axes=("pod", "data", "model"),
+                                head_axes=None, remat="none", micro=4),
+    "pure_dp+none+ce":  dict(rules=PURE_DP_RULES,
+                             batch_axes=("pod", "data", "model"),
+                             head_axes=None, remat="none", ce="chunked"),
+    "pure_dp+none+ce+pbf16": dict(rules=PURE_DP_RULES,
+                                  batch_axes=("pod", "data", "model"),
+                                  head_axes=None, remat="none",
+                                  ce="chunked", p_bf16=True),
+    "ce_chunked":       dict(ce="chunked"),
+    "p_bf16":           dict(p_bf16=True),
+    "ce+pbf16":         dict(ce="chunked", p_bf16=True),
+}
+
+
+def run_variant(arch, shape, name, *, multi_pod=False):
+    v = VARIANTS[name]
+    flags.REMAT_MODE = v.get("remat", "full")
+    flags.CE_MODE = v.get("ce", "dense")
+    flags.ATTN_P_BF16 = v.get("p_bf16", False)
+    try:
+        r = roofline_cell(arch, shape, multi_pod=multi_pod,
+                          n_micro=v.get("micro", 1),
+                          rules=v.get("rules"),
+                          batch_axes=v.get("batch_axes"),
+                          head_axes=v.get("head_axes", "model"))
+    finally:
+        flags.REMAT_MODE = "full"
+        flags.CE_MODE = "dense"
+        flags.ATTN_P_BF16 = False
+    r["variant"] = name
+    return r
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    for name in args.variants.split(","):
+        try:
+            r = run_variant(args.arch, args.shape, name,
+                            multi_pod=args.multi_pod)
+        except Exception as e:  # noqa: BLE001
+            r = {"variant": name, "error": f"{type(e).__name__}: {e}"}
+        results.append(r)
+        if "error" in r:
+            print(f"[ERR ] {name:22s} {r['error'][:90]}", flush=True)
+        elif r.get("skipped"):
+            print(f"[SKIP] {name:22s} {r['reason'][:70]}", flush=True)
+        else:
+            print(f"[OK  ] {name:22s} dom={r['dominant']:10s} "
+                  f"c={r['compute_s']:.4f} m={r['memory_s']:.4f} "
+                  f"x={r['collective_s']:.4f} "
+                  f"bound={max(r['compute_s'], r['memory_s'], r['collective_s']):.4f} "
+                  f"roofline={r['roofline_fraction']:.4f}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

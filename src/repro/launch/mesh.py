@@ -1,0 +1,34 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required because
+the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = ("data", "model") — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for_devices(n_devices: int, model_parallel: int = 16):
+    """Elastic variant: build the largest (data, model) mesh that fits the
+    currently-visible devices (node-failure / scale-down path)."""
+    model = min(model_parallel, n_devices)
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes over which the batch dimension is sharded."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+__all__ = ["make_production_mesh", "make_mesh_for_devices", "batch_axes"]

@@ -1,0 +1,170 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Roofline extraction (§Roofline of the brief).
+#
+# XLA's cost model counts a while-loop body once, so scanned layer stacks
+# would be undercounted by ~L.  This runner lowers *unrolled depth
+# variants* of each cell and extrapolates exactly:
+#
+#     per_layer = f(d2) - f(d1)              (d2 - d1 layers apart)
+#     total     = f(d1) + (L - d1) * per_layer
+#
+# applied to HLO_FLOPs, HLO bytes, and collective bytes independently.
+# Hybrid (Zamba2) decomposes into shared-block + per-mamba-layer costs via
+# three depth variants; enc-dec scales both stacks together (6/6).
+# The full-depth compile (memory fit + shardability) comes from
+# launch/dryrun.py — run that first; this adds the corrected cost terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.roofline [--arch A] [--shape S]
+#       [--json out.json] [--micro N] [--multi-pod]
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..models.config import SHAPES
+from ..models import registry as R
+from .dryrun import (ICI_BW, HBM_BW, PEAK_FLOPS, lower_cell,
+                     roofline_terms)
+
+
+def _measure(arch, shape_name, cfg, multi_pod, n_micro, rules=None,
+             batch_axes=None, head_axes="model"):
+    r = lower_cell(arch, shape_name, multi_pod=multi_pod, n_micro=n_micro,
+                   cfg_override=cfg, cost_unroll=True, rules=rules,
+                   donate=False, batch_axes_override=batch_axes,
+                   head_axes_override=head_axes)
+    if r.get("skipped"):
+        return None
+    return np.array([r["hlo_flops"], r["hlo_bytes"],
+                     r["collective_bytes"]]), r
+
+
+def depth_variants(cfg):
+    """Returns (variants, combiner) where variants is a list of depth-
+    reduced configs and combiner maps their cost vectors to the full-depth
+    estimate."""
+    fam = cfg.family
+    if fam == "hybrid":
+        p = cfg.shared_attn_period
+        L = cfg.n_layers
+        n_groups, rem = L // p, L % p
+        v = [cfg.scaled(n_layers=p), cfg.scaled(n_layers=2 * p),
+             cfg.scaled(n_layers=p + 1)]
+
+        def combine(c):
+            group = c[1] - c[0]          # shared block + p mamba layers
+            mamba = c[2] - c[0]          # one mamba layer
+            base = c[0] - group
+            return base + n_groups * group + rem * mamba
+        return v, combine
+    if fam == "encdec":
+        v = [cfg.scaled(n_layers=1, n_enc_layers=1),
+             cfg.scaled(n_layers=2, n_enc_layers=2)]
+
+        def combine(c):
+            pair = c[1] - c[0]
+            return c[0] + (cfg.n_layers - 1) * pair
+        return v, combine
+    v = [cfg.scaled(n_layers=1), cfg.scaled(n_layers=2)]
+
+    def combine(c):
+        layer = c[1] - c[0]
+        return c[0] + (cfg.n_layers - 1) * layer
+    return v, combine
+
+
+def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  n_micro: int = 1, rules=None, batch_axes=None,
+                  head_axes="model") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = R.cell_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": True, "reason": why}
+    variants, combine = depth_variants(cfg)
+    costs = []
+    t0 = time.time()
+    for vcfg in variants:
+        out = _measure(arch, shape_name, vcfg, multi_pod, n_micro, rules,
+                       batch_axes, head_axes)
+        if out is None:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "skipped": True, "reason": "variant unsupported"}
+        costs.append(out[0])
+    est = np.maximum(combine(costs), 0.0)   # clamp extrapolation noise
+    flops, hbm_bytes, coll = (float(est[0]), float(est[1]), float(est[2]))
+    chips = 512 if multi_pod else 256
+    terms = roofline_terms(flops, hbm_bytes, coll, chips)
+    mf = R.model_flops(cfg, shape)
+    dom = terms["dominant"]
+    bound_s = max(terms["compute_s"], terms["memory_s"],
+                  terms["collective_s"])
+    # roofline fraction: useful model FLOPs per second achievable at the
+    # binding term, relative to peak compute
+    achievable_flops_per_s = (mf / bound_s) if bound_s > 0 else 0.0
+    frac = achievable_flops_per_s / (chips * PEAK_FLOPS)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "skipped": False,
+        "hlo_flops": flops, "hlo_bytes": hbm_bytes,
+        "collective_bytes": coll,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": frac,
+        "measure_s": round(time.time() - t0, 1),
+        **terms,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            try:
+                r = roofline_cell(arch, shape, multi_pod=args.multi_pod,
+                                  n_micro=args.micro)
+            except Exception as e:  # noqa: BLE001
+                r = {"arch": arch, "shape": shape, "error":
+                     f"{type(e).__name__}: {e}"}
+            results.append(r)
+            if r.get("skipped"):
+                print(f"[SKIP] {arch:24s} {shape:12s} {r['reason'][:60]}",
+                      flush=True)
+            elif "error" in r:
+                print(f"[ERR ] {arch:24s} {shape:12s} {r['error'][:90]}",
+                      flush=True)
+            else:
+                print(f"[OK  ] {arch:24s} {shape:12s} dom={r['dominant']:10s} "
+                      f"c={r['compute_s']:.4f} m={r['memory_s']:.4f} "
+                      f"x={r['collective_s']:.4f} "
+                      f"useful={r['useful_flops_ratio']:.2f} "
+                      f"roofline={r['roofline_fraction']:.3f}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

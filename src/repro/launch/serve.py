@@ -1,0 +1,84 @@
+"""Serving driver with GRMU admission control.
+
+Demonstrates the paper's technique as the framework's admission/placement
+layer: incoming requests (each an (arch x shape) workload sized to a slice
+profile) are admitted onto pod GPUs/slices by GRMU; admitted requests run
+batched decode on the model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --requests 32 --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..core.grmu import GRMU
+from ..core.mig import PROFILE_BY_NAME
+from ..core.podsched import profile_for_request
+from ..models import transformer as M
+from ..serve import engine as serve_engine
+from ..sim.cluster import VM, make_cluster
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--gpus", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+    # --- GRMU admission: size each request to a MIG profile and place ----
+    cluster = make_cluster([1] * args.gpus)
+    grmu = GRMU(cluster, heavy_capacity_frac=0.3)
+    rng = np.random.default_rng(args.seed)
+    admitted = []
+    for i in range(args.requests):
+        prof = profile_for_request(
+            context=int(rng.choice([2048, 8192, 32768])),
+            batch=int(rng.choice([1, 4, 16])))
+        vm = VM(i, PROFILE_BY_NAME[prof], arrival=0.0, duration=1e9,
+                cpu=0.0, ram=0.0)
+        if grmu.place(vm):
+            admitted.append(i)
+    print(f"[serve] admitted {len(admitted)}/{args.requests} requests; "
+          f"active GPUs={sum(1 for g in cluster.all_gpus() if not g.is_empty)}",
+          flush=True)
+
+    # --- batched decode for admitted requests ----------------------------
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    B = min(args.batch, max(1, len(admitted)))
+    cache = serve_engine.init_cache(cfg, batch=B, max_seq=args.max_seq)
+    step = jax.jit(lambda p, c, t, q: serve_engine.decode_step(p, c, t, q,
+                                                               cfg))
+    tokens = jnp.ones((B, 1), jnp.int32)
+    t0 = time.time()
+    out_toks = []
+    for t in range(args.tokens):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, cache = step(params, cache, tokens, pos)
+        tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_toks.append(np.asarray(tokens)[:, 0])
+    dt = time.time() - t0
+    print(f"[serve] decoded {args.tokens} tokens x {B} seqs in {dt:.2f}s "
+          f"({args.tokens * B / dt:.1f} tok/s)", flush=True)
+    print(f"[serve] sample continuation: {[int(r[0]) for r in out_toks]}",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

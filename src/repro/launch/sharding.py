@@ -1,0 +1,148 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD via NamedSharding).
+
+Baseline layout (see EXPERIMENTS.md §Perf for hillclimbed variants):
+  * tensor-parallel axes (heads / mlp / experts / vocab / ssm channel) on
+    ``model`` (16-way),
+  * ``embed`` on (pod, data) — ZeRO-3/FSDP-style parameter sharding, so a
+    236B-param model fits HBM; XLA inserts per-layer all-gathers inside the
+    layer scan,
+  * batch on (pod, data).
+
+``logical_to_pspec`` silently drops a rule when the dimension is not
+divisible by the mesh-axis extent (e.g. whisper's vocab=51865 stays
+replicated) — recorded per-param by ``explain_sharding``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# logical axis -> mesh axes (tuple = joint sharding over both)
+DEFAULT_RULES: Dict[str, Any] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "experts_vec": "model",
+    "q_lora": "model",
+    "kv_lora": "model",
+    "ssm_in": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "heads_vec": "model",
+    "embed": ("pod", "data"),      # FSDP; 'pod' dropped on single-pod mesh
+    "layers": None,
+    # activation/cache logical axes
+    "batch": ("pod", "data"),
+    "kv_heads_cache": "model",
+    "seq_model": "model",      # sequence-sharded KV cache (GQA kv < TP)
+    "embed_vec": None,
+    None: None,
+}
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _resolve(mesh: Mesh, axes):
+    """Drop mesh axes absent from this mesh (e.g. 'pod' on single pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def logical_to_pspec(logical_axes: Tuple[Optional[str], ...],
+                     shape: Tuple[int, ...], mesh: Mesh,
+                     rules: Optional[Dict[str, Any]] = None) -> PS:
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used = set()
+    for dim, name in zip(shape, logical_axes):
+        mesh_axes = _resolve(mesh, rules.get(name))
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        flat = (mesh_axes,) if isinstance(mesh_axes, str) else mesh_axes
+        if any(a in used for a in flat):
+            parts.append(None)          # a mesh axis may appear only once
+            continue
+        if dim % _axis_size(mesh, mesh_axes) != 0:
+            parts.append(None)          # non-divisible -> replicate
+            continue
+        used.update(flat)
+        parts.append(mesh_axes)
+    return PS(*parts)
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh,
+                   rules: Optional[Dict[str, Any]] = None):
+    """Map trees of logical axes + shapes to NamedShardings."""
+    def one(axes, shaped):
+        spec = logical_to_pspec(tuple(axes), tuple(shaped.shape), mesh,
+                                rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_pspec(mesh: Mesh, ndim: int, batch_dim: int = 0,
+                axes=None) -> PS:
+    axes = tuple(a for a in (axes or ("pod", "data"))
+                 if a in mesh.axis_names)
+    parts = [None] * ndim
+    parts[batch_dim] = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return PS(*parts)
+
+
+def batch_sharding(mesh: Mesh, shaped, batch_dim: int = 0,
+                   shardable: bool = True, axes=None) -> NamedSharding:
+    """NamedSharding for an input array; falls back to replication when the
+    batch dim is smaller than the dp extent (e.g. long_500k's batch=1)."""
+    ndim = len(shaped.shape)
+    if not shardable or ndim == 0:
+        return NamedSharding(mesh, PS())
+    ax = tuple(a for a in (axes or ("pod", "data"))
+               if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+    if shaped.shape[batch_dim] % dp != 0:
+        return NamedSharding(mesh, PS())
+    return NamedSharding(mesh, batch_pspec(mesh, ndim, batch_dim, ax))
+
+
+def explain_sharding(axes_tree: Any, shape_tree: Any, mesh: Mesh,
+                     rules: Optional[Dict[str, Any]] = None):
+    """(path, logical axes, pspec) rows — for DESIGN/EXPERIMENTS tables."""
+    rows = []
+
+    def walk(prefix, axes, shaped):
+        if isinstance(axes, tuple):
+            spec = logical_to_pspec(axes, tuple(shaped.shape), mesh, rules)
+            rows.append((prefix, axes, tuple(shaped.shape), spec))
+            return
+        for k in axes:
+            walk(f"{prefix}/{k}", axes[k], shaped[k])
+
+    walk("", axes_tree, shape_tree)
+    return rows
+
+
+__all__ = ["DEFAULT_RULES", "logical_to_pspec", "tree_shardings",
+           "batch_pspec", "batch_sharding", "explain_sharding"]

@@ -1,0 +1,85 @@
+"""Lowering-mode flags.
+
+``COST_UNROLL``: when True, structural scans (layer stack, attention
+key-chunk loop, microbatch loop) are fully unrolled at trace time so that
+``compiled.cost_analysis()`` sees every iteration — XLA's HLO cost model
+counts a while-loop body exactly once, which silently undercounts FLOPs /
+bytes / collective traffic of scanned code.  The roofline runner lowers
+small-depth unrolled variants (depth 1 and 2) and extrapolates
+``base + L * per_layer`` (see benchmarks/roofline.py); production
+lowerings keep scans rolled (COST_UNROLL=False) for compile-time and HLO
+size.
+
+Per-time-step recurrences (RWKV-6 time mix, Mamba-2 inter-chunk state
+scan) stay rolled even in cost mode: their bodies are matmul-free and
+contribute negligible FLOPs (<0.1% — verified in tests/test_roofline.py);
+their HBM-traffic undercount is documented in EXPERIMENTS.md.
+"""
+COST_UNROLL = False
+
+# Mesh axes for activation sharding constraints inside model code.
+# None (default, smoke tests / no mesh) disables constraints; the dry-run
+# sets BATCH_AXES=('pod','data')/('data',) and HEAD_AXES='model' so GSPMD
+# cannot silently replicate attention across either axis (it does, 16x,
+# without the pins — see tests/test_roofline.py).
+BATCH_AXES = None
+HEAD_AXES = None
+# kv-head pin: set to 'model' only when n_kv_heads divides the model axis
+# (the dry-run decides per arch); None replicates kv heads.
+KV_HEAD_AXES = None
+# when kv heads can't be model-sharded (GQA kv < 16), the decode KV cache
+# shards its SEQUENCE dim over the model axis instead (distributed
+# softmax: small cross-shard max/sum collectives, 16x less cache HBM).
+KV_SEQ_AXES = None
+
+# Remat policy for the layer scan: "full" (checkpoint everything — the
+# baseline, min memory), "dots" (save matmul outputs, recompute the
+# cheap elementwise tail), "none" (no remat — max memory, min FLOPs).
+REMAT_MODE = "full"
+
+# §Perf knobs (hillclimb variants):
+# CE_MODE "chunked" = fused lm-head + online-logsumexp CE over vocab
+# chunks (full logits never materialized); "dense" = materialize logits.
+CE_MODE = "dense"
+# Store the attention probability tile in bf16 for the p@v matmul
+# (f32 max/sum statistics retained) — halves the second-pass score bytes.
+ATTN_P_BF16 = False
+
+
+def remat_wrap(body):
+    import jax
+    if REMAT_MODE == "none":
+        return body
+    if REMAT_MODE == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def unroll(length: int) -> int:
+    """Scan unroll factor under the current mode."""
+    return length if COST_UNROLL else 1
+
+
+def constrain(x, *dim_axes):
+    """with_sharding_constraint(x, PS(*dim_axes)) if constraints are on.
+    ``dim_axes`` entries: 'batch' -> BATCH_AXES, 'heads' -> HEAD_AXES,
+    None -> unsharded."""
+    if BATCH_AXES is None and HEAD_AXES is None:
+        return x
+    import jax
+    from jax.sharding import PartitionSpec as PS
+    parts = []
+    for d in dim_axes:
+        if d == "batch":
+            parts.append(BATCH_AXES)
+        elif d == "heads":
+            parts.append(HEAD_AXES)
+        elif d == "kv_heads":
+            parts.append(KV_HEAD_AXES)
+        elif d == "kv_seq":
+            parts.append(KV_SEQ_AXES)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, PS(*parts))

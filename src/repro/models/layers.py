@@ -1,0 +1,501 @@
+"""Core layers: norms, RoPE/M-RoPE, GQA + MLA attention, SwiGLU, MoE.
+
+Functional style: each module has ``<name>_spec(cfg) -> {name: P}`` and
+``<name>_apply(params, ...)``.  Layer stacks are scanned, so specs are per
+single layer; the stack adds a leading 'layers' axis (see transformer.py).
+
+Attention uses a flash-style chunked implementation (static python loop
+over query chunks, ``lax.scan`` over key chunks up to the causal/window
+bound) so prefill at 32k-512k context is O(S) memory and ~S^2/2 FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLAConfig, ModelConfig, MoEConfig
+from .params import P
+from . import flags
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    h = x.astype(f32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    out = h * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(f32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None):
+    """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency channels are split into
+    sections, each driven by its own position axis (temporal, height,
+    width).  With text-only position ids all three axes coincide and
+    M-RoPE degenerates to standard RoPE.
+    """
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), f32)          # (hd/2,)
+    if positions.ndim == 2:                                   # (B, S)
+        angles = positions[..., None].astype(f32) * freqs     # (B,S,hd/2)
+    else:                                                     # (3, B, S)
+        assert mrope_sections is not None
+        parts = []
+        start = 0
+        for axis, sec in enumerate(mrope_sections):
+            angles_a = (positions[axis][..., None].astype(f32)
+                        * freqs[start:start + sec])
+            parts.append(angles_a)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)              # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Qwen2-VL uses [16, 24, 24] for head_dim 128; scale proportionally."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (reference implementation; the Pallas
+# kernel in repro.kernels.flash_attention mirrors this block structure)
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask, scale):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd) (kv pre-expanded to H heads).
+    Returns (out (B,H,Sq,hd_v), m, l).
+
+    Full-H layout on purpose: H is divisible by the 16-way model axis for
+    every assigned arch, while KV (2-8 for GQA) is not — a (KV, G) grouped
+    layout forces GSPMD to replicate the whole attention computation
+    across the model axis (16x redundant FLOPs, verified in
+    tests/test_roofline.py::test_attention_is_head_sharded)."""
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(f32), k.astype(f32))
+    s = s * scale
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)                          # (B,H,Sq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    if flags.ATTN_P_BF16:
+        # store the probability tile in bf16 for the p@v pass (flash
+        # kernels feed the MXU in bf16 anyway); statistics stay f32.
+        out = jnp.einsum("bhqs,bshd->bhqd", p.astype(jnp.bfloat16),
+                         v.astype(jnp.bfloat16),
+                         preferred_element_type=f32)
+    else:
+        out = jnp.einsum("bhqs,bshd->bhqd", p, v.astype(f32))
+    return out, m, l
+
+
+def _expand_kv(k, H):
+    """(B,S,KV,hd) -> (B,S,H,hd) by repeating each kv head G times."""
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    q_chunk: int = 1024, k_chunk: int = 1024,
+                    positions_q0: int = 0) -> jax.Array:
+    """Chunked attention with online softmax.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    ``positions_q0``: absolute position of q[0] (Sk - Sq for decode).
+    Causal chunk skipping is *static*: query chunk i only visits key chunks
+    up to its causal bound (and from its window lower bound), so the
+    compiled FLOPs are ~half of the naive mask-everything approach.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    hd_v = v.shape[-1]                    # MLA: v head dim != qk head dim
+    scale = 1.0 / np.sqrt(hd)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    # Pin layout: batch on dp axes, q heads on TP.  k/v are NOT pinned on
+    # heads: pinning the expanded kv to the model axis makes the backward
+    # of the expand an all-reduce over the EXPANDED (H-head) gradient —
+    # 16x the kv-head gradient traffic.  Left free, XLA keeps kv grouped/
+    # replicated and slices locally (zero forward comm), and the backward
+    # reduces only the true (KV-head) gradient.
+    q = flags.constrain(q, "batch", None, "heads", None)
+    # full-head K/V (MLA / MHA: KV == H) can safely pin heads — there is
+    # no expand whose backward would blow up; GQA (KV < H) stays unpinned.
+    kv_head_pin = "heads" if KV == H else None
+    k = flags.constrain(k, "batch", None, kv_head_pin, None)
+    v = flags.constrain(v, "batch", None, kv_head_pin, None)
+
+    if flags.COST_UNROLL and Sq >= 8192:
+        # cost-mode coarsening: bound the unrolled block count at ~36 so
+        # depth-variant compiles stay tractable; the masked diagonal adds
+        # <= chunk/S (~12.5%) to the attention-matmul FLOPs, i.e. a few
+        # percent of the cell total (documented in EXPERIMENTS §Roofline).
+        q_chunk = k_chunk = Sq // 8
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Sk + k_chunk - 1) // k_chunk
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0, (Sq, q_chunk, Sk, k_chunk)
+
+    outs = []
+    for qi in range(nq):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        q_pos0 = positions_q0 + qi * q_chunk
+        # static causal / window bounds in key-chunk units
+        hi = nk if not causal else min(
+            nk, (q_pos0 + q_chunk + k_chunk - 1) // k_chunk)
+        lo = 0
+        if window is not None:
+            lo = max(0, (q_pos0 - window) // k_chunk)
+        acc = jnp.zeros((B, H, q_chunk, hd_v), f32)
+        m = jnp.full((B, H, q_chunk), -1e30, f32)
+        l = jnp.zeros((B, H, q_chunk), f32)
+
+        qpos = q_pos0 + jnp.arange(q_chunk)
+
+        def body(carry, ki):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, 1)
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            o_b, m_b, l_b = _attend_block(q_blk, k_blk, v_blk,
+                                          mask[None, None], scale)
+            m_new = jnp.maximum(m, m_b)
+            alpha = jnp.exp(m - m_new)
+            beta = jnp.exp(m_b - m_new)
+            acc = acc * alpha[..., None] + o_b * beta[..., None]
+            l = l * alpha + l_b * beta
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc, m, l), jnp.arange(lo, hi),
+            unroll=flags.unroll(max(1, hi - lo)))
+        out_blk = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,H,q_chunk,hd_v) -> (B,q_chunk,H,hd_v)
+        out_blk = out_blk.transpose(0, 2, 1, 3)
+        outs.append(out_blk.astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(q, k, v, cache_len: Optional[jax.Array] = None):
+    """Single-step attention. q: (B,1,H,hd), k/v: (B,S,KV,hd).
+
+    Decode uses the GROUPED (KV, G) layout, unlike train/prefill: q is a
+    single token (replicating it is free), so K/V are never expanded —
+    expanding a sequence-sharded 32k cache made GSPMD all-gather it in
+    f32 (4 GiB per tensor per layer, the dominant decode collective).
+    Scores are pinned to the cache layout; the softmax over a sharded S
+    becomes a distributed max/sum with (B,KV,G)-sized collectives."""
+    B, _, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qr = q[:, 0].reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr.astype(f32), k.astype(f32))
+    s = s * scale
+    s = flags.constrain(s, "batch", "kv_heads", None, "kv_seq")
+    if cache_len is not None:
+        valid = jnp.arange(S)[None, :] < cache_len[:, None]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(f32))
+    return o.reshape(B, 1, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def attention_spec(cfg: ModelConfig) -> Dict[str, P]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": P((d, cfg.n_heads * hd), ("embed", "heads")),
+        "wk": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+        "wv": P((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+        "wo": P((cfg.n_heads * hd, d), ("heads", "embed")),
+    }
+
+
+def attention_qkv(params, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ params["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    sections = (default_mrope_sections(hd) if cfg.mrope else None)
+    q = apply_rope(q, positions, cfg.rope_theta, sections)
+    k = apply_rope(k, positions, cfg.rope_theta, sections)
+    return q, k, v
+
+
+def attention_apply(params, x, cfg: ModelConfig, positions, *,
+                    window: Optional[int] = None):
+    q, k, v = attention_qkv(params, x, cfg, positions)
+    o = flash_attention(q, k, v, causal=True,
+                        window=window or cfg.sliding_window)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ params["wo"]
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache, pos, *,
+                     window: Optional[int] = None):
+    """x: (B,1,D); cache: {'k','v'}: (B,S,KV,hd); pos: (B,) int32."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ params["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    sections = (default_mrope_sections(hd) if cfg.mrope else None)
+    posb = pos[:, None]
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(posb[None], (3, B, 1))
+        q = apply_rope(q, pos3, cfg.rope_theta, sections)
+        k = apply_rope(k, pos3, cfg.rope_theta, sections)
+    else:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = pos % S  # ring buffer for sliding windows; plain append otherwise
+    # where-based in-place update instead of a vmapped scatter: GSPMD
+    # partitions elementwise selects perfectly, whereas the per-batch
+    # dynamic_update_slice forces an all-gathered temp of the whole cache
+    # (85 GiB/device at stablelm decode_32k before this change).
+    sel = (jnp.arange(S)[None, :] == slot[:, None])[..., None, None]
+    k_all = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+    v_all = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+    k_all = flags.constrain(k_all, "batch", "kv_seq", "kv_heads", None)
+    v_all = flags.constrain(v_all, "batch", "kv_seq", "kv_heads", None)
+    o = decode_attention(q, k_all, v_all, cache_len=jnp.minimum(pos + 1, S))
+    new_cache = {"k": k_all, "v": v_all}
+    return o.reshape(B, 1, -1) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+def mla_spec(cfg: ModelConfig) -> Dict[str, P]:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": P((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": P((m.q_lora_rank,), ("q_lora",), init="ones"),
+        "wq_b": P((m.q_lora_rank, H * qk), ("q_lora", "heads")),
+        "wkv_a": P((d, m.kv_lora_rank + m.rope_head_dim),
+                   ("embed", "kv_lora")),
+        "kv_norm": P((m.kv_lora_rank,), ("kv_lora",), init="ones"),
+        "wkv_b": P((m.kv_lora_rank, H * (m.nope_head_dim + m.v_head_dim)),
+                   ("kv_lora", "heads")),
+        "wo": P((H * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_n, qk_r, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    q_lat = rmsnorm({"scale": params["q_norm"]}, x @ params["wq_a"])
+    q = (q_lat @ params["wq_b"]).reshape(B, S, H, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ params["wkv_a"]                      # (B,S,kv_lora+rope)
+    c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = rmsnorm({"scale": params["kv_norm"]}, c)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    kv = (c @ params["wkv_b"]).reshape(B, S, H, qk_n + vd)
+    k_nope, v = kv[..., :qk_n], kv[..., qk_n:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, qk_r))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q_full, k, v, c, k_rope
+
+
+def mla_apply(params, x, cfg: ModelConfig, positions):
+    q, k, v, _, _ = _mla_qkv(params, x, cfg, positions)
+    o = flash_attention(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ params["wo"]
+
+
+def mla_decode(params, x, cfg: ModelConfig, cache, pos):
+    """MLA decode caches the *latent* (c, k_rope) — the paper's memory win.
+    cache: {'c': (B,S,kv_lora), 'kr': (B,S,1,rope)}."""
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    qk_n, qk_r, vd = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+    q_lat = rmsnorm({"scale": params["q_norm"]}, x @ params["wq_a"])
+    q = (q_lat @ params["wq_b"]).reshape(B, 1, H, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    ckv = x @ params["wkv_a"]
+    c_new, kr_new = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c_new = rmsnorm({"scale": params["kv_norm"]}, c_new)
+    kr_new = apply_rope(kr_new[:, :, None, :], pos[:, None], cfg.rope_theta)
+    S = cache["c"].shape[1]
+    sel = jnp.arange(S)[None, :] == pos[:, None]        # (B, S)
+    c_all = jnp.where(sel[..., None], c_new.astype(cache["c"].dtype),
+                      cache["c"])
+    kr_all = jnp.where(sel[..., None, None],
+                       kr_new.astype(cache["kr"].dtype), cache["kr"])
+    c_all = flags.constrain(c_all, "batch", "kv_seq", None)
+    kr_all = flags.constrain(kr_all, "batch", "kv_seq", None, None)
+    kv = (c_all @ params["wkv_b"]).reshape(B, S, H, qk_n + vd)
+    k_nope, v = kv[..., :qk_n], kv[..., qk_n:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all, (B, S, H, qk_r))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = decode_attention(q_full, k, v, cache_len=jnp.minimum(pos + 1, S))
+    out = o.reshape(B, 1, -1) @ params["wo"]
+    return out, {"c": c_all, "kr": kr_all}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, f: int) -> Dict[str, P]:
+    return {
+        "w_gate": P((d, f), ("embed", "mlp")),
+        "w_up": P((d, f), ("embed", "mlp")),
+        "w_down": P((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params, x):
+    # Megatron column->row parallel: hidden is (batch, ..., dff/TP); pin it
+    # so the backward cannot drift to batch-replicated layouts.
+    g = (x @ params["w_gate"]).astype(f32)
+    g = flags.constrain(g, *(("batch",) + (None,) * (g.ndim - 2) + ("heads",)))
+    u = (x @ params["w_up"]).astype(f32)
+    u = flags.constrain(u, *(("batch",) + (None,) * (u.ndim - 2) + ("heads",)))
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    out = h @ params["w_down"]
+    return flags.constrain(out, *(("batch",) + (None,) * (out.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (scatter dispatch with static capacity)
+# ---------------------------------------------------------------------------
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, P]:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    f = m.d_ff_expert or cfg.d_ff
+    spec = {
+        "router": P((d, m.n_experts), ("embed", "experts_vec")),
+        "w_gate": P((m.n_experts, d, f), ("experts", "embed", "mlp")),
+        "w_up": P((m.n_experts, d, f), ("experts", "embed", "mlp")),
+        "w_down": P((m.n_experts, f, d), ("experts", "mlp", "embed")),
+    }
+    if m.n_shared:
+        spec["shared"] = mlp_spec(d, f * m.n_shared)
+    return spec
+
+
+def moe_apply(params, x, cfg: ModelConfig,
+              capacity_factor: Optional[float] = None):
+    """x: (B, S, D).  Top-k routing with static per-expert capacity and
+    scatter dispatch (no (T, E, C) one-hot; buffers are (E*C, D))."""
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    cf = capacity_factor or m.capacity_factor
+    C = max(1, int(np.ceil(T * K / E * cf)))
+    xt = x.reshape(T, D)
+
+    logits = (xt @ params["router"]).astype(f32)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                              # (T*K,)
+    # Rank of each token within its expert via STABLE SORT, not a
+    # (T*K, E) one-hot cumsum: the cumsum is O(T*K*E) memory (25 GiB per
+    # device at deepseek-v2 prefill scale) and XLA's cost model charges
+    # its reduce-window quadratically — it dominated the whole cell's
+    # FLOPs/bytes (§Perf iteration).  sort is O(T*K log) and exact:
+    # stable order within an expert run == arrival order == cumsum rank.
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)                # (T*K,)
+    sorted_e = flat_e[order]
+    run_start = jnp.searchsorted(sorted_e, jnp.arange(E))   # (E,)
+    rank_sorted = jnp.arange(n) - run_start[sorted_e]
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)        # E*C = drop bin
+
+    x_rep = jnp.repeat(xt, K, axis=0)                       # (T*K, D)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(x_rep)
+    h = buf[:-1].reshape(E, C, D)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+                    .astype(f32))
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"]).astype(f32)
+    y = jnp.einsum("ecf,efd->ecd", (g * u).astype(x.dtype),
+                   params["w_down"])
+    y_slots = y.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None],
+                         y_slots[jnp.minimum(slot, E * C - 1)], 0.0)
+    weighted = gathered * top_p.reshape(-1)[:, None].astype(x.dtype)
+    out = weighted.reshape(T, K, D).sum(axis=1)
+
+    if m.n_shared:
+        out = out + mlp_apply(params["shared"], xt)
+    # router z-loss / load-balance aux (returned for the train loss).
+    # top_k indices are distinct, so a scatter-add count == the "expert
+    # appears in the token's top-k" indicator sum (no (T,K,E) one-hot).
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.zeros((E,), f32).at[flat_e].add(1.0) / T
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux
+
+
+__all__ = [
+    "rmsnorm_spec", "rmsnorm", "apply_rope", "default_mrope_sections",
+    "flash_attention", "decode_attention", "attention_spec",
+    "attention_apply", "attention_decode", "mla_spec", "mla_apply",
+    "mla_decode", "mlp_spec", "mlp_apply", "moe_spec", "moe_apply",
+    "rope_freqs", "attention_qkv",
+]

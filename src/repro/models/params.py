@@ -1,0 +1,62 @@
+"""Parameter-tree utilities: declarative specs -> init / logical axes.
+
+Every module declares its parameters as a (nested) dict of ``P`` leaves —
+shape + logical axis names + initializer.  From one spec we derive:
+  * ``init_tree``   — materialized parameters (or abstract, under
+    ``jax.eval_shape`` for the dry-run),
+  * ``axes_tree``   — same-structure tree of logical-axis tuples, mapped to
+    mesh axes by ``repro.launch.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_tree(spec: Dict[str, Any], key: jax.Array,
+              dtype=jnp.bfloat16) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for p, k in zip(leaves, keys):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[-1], 1)
+            std = p.scale / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, p.shape, jnp.float32)
+                        * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(spec: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree.map(lambda p: p.axes, spec, is_leaf=is_leaf)
+
+
+def param_count(spec: Dict[str, Any]) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=is_leaf)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+__all__ = ["P", "init_tree", "axes_tree", "param_count", "is_leaf"]

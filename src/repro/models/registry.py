@@ -1,0 +1,186 @@
+"""Registry: (architecture x input shape) -> step function + input specs.
+
+The dry-run lowers exactly what this module returns:
+  * ``train_4k``     — ``train_step`` (fwd+bwd+AdamW),
+  * ``prefill_32k``  — ``prefill``   (full-context forward, last logits),
+  * ``decode_32k`` / ``long_500k`` — ``decode_step`` (one new token against
+    a seq_len cache), per the assignment brief.
+
+``input_specs`` returns ShapeDtypeStructs only — no allocation; the
+frontend stubs ([vlm]/[audio]) show up here as precomputed embedding
+inputs.  ``cell_supported`` encodes the applicability matrix
+(long_500k only for sub-quadratic archs; no decode for encoder-only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..serve import engine as serve_engine
+from ..train.optimizer import AdamWConfig, adamw_init
+from ..train.step import make_train_step
+from .config import SHAPES, ModelConfig, ShapeConfig
+from . import transformer as M
+
+bf16 = jnp.bfloat16
+i32 = jnp.int32
+SDS = jax.ShapeDtypeStruct
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: O(S^2) prefill/cache at "
+                       "524288 ctx — skipped per brief (see DESIGN.md)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {
+            "frames": SDS((B, S, cfg.d_model), bf16),   # stub frontend
+            "tokens": SDS((B, S), i32),
+            "labels": SDS((B, S), i32),
+        }
+    specs = {"tokens": SDS((B, S), i32), "labels": SDS((B, S), i32)}
+    if cfg.family == "vlm":
+        specs["mrope_positions"] = SDS((3, B, S), i32)  # stub frontend
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": SDS((B, S, cfg.d_model), bf16)}
+    return {"tokens": SDS((B, S), i32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    # eval_shape: a decode_32k cache is ~100 GB — never materialize it here
+    cache_specs = jax.eval_shape(
+        lambda: serve_engine.init_cache(cfg, B, S))
+    return {
+        "cache": cache_specs,
+        "tokens": SDS((B, 1), i32),
+        "pos": SDS((B,), i32),
+    }
+
+
+def input_specs(arch_or_cfg, shape_name: str, *, smoke: bool = False):
+    if isinstance(arch_or_cfg, str):
+        cfg = (get_smoke_config(arch_or_cfg) if smoke
+               else get_config(arch_or_cfg))
+    else:
+        cfg = arch_or_cfg
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig,
+              n_micro: int = 1) -> Callable:
+    """The function the dry-run lowers for this cell."""
+    if shape.kind == "train":
+        ts = make_train_step(cfg, AdamWConfig(), n_micro=n_micro)
+
+        def train_fn(params, opt_state, batch):
+            return ts(params, opt_state, batch)
+        return train_fn
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            if cfg.family == "encdec":
+                enc = M.encode(params, batch["frames"], cfg)
+                return M.logits_fn(params, enc[:, -1:], cfg)
+            return serve_engine.prefill(params, batch["tokens"], cfg,
+                                        shape.seq_len)
+        return prefill_fn
+
+    def decode_fn(params, batch):
+        return serve_engine.decode_step(params, batch["cache"],
+                                        batch["tokens"], batch["pos"], cfg)
+    return decode_fn
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs (for the dry-run; no allocation)."""
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)))
+    return params, opt
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train;
+    2*N*D for prefill; 2*N_active per token for decode."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # one token per seq
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    from .params import param_count, is_leaf
+    from .transformer import stacked_model_spec
+    spec = stacked_model_spec(cfg)
+    total = param_count(spec)
+    if cfg.moe is None:
+        return total
+    # subtract inactive routed experts
+    m = cfg.moe
+    f = m.d_ff_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    inactive = (m.n_experts - m.top_k) * per_expert * cfg.n_layers
+    return total - inactive
+
+
+def total_param_count(cfg: ModelConfig) -> int:
+    from .params import param_count
+    from .transformer import stacked_model_spec
+    return param_count(stacked_model_spec(cfg))
+
+
+ALL_CELLS = [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+def supported_cells():
+    out = []
+    for a, s in ALL_CELLS:
+        cfg = get_config(a)
+        ok, why = cell_supported(cfg, SHAPES[s])
+        out.append((a, s, ok, why))
+    return out
+
+
+__all__ = ["input_specs", "make_step", "abstract_params",
+           "abstract_train_state", "cell_supported", "model_flops",
+           "active_param_count", "total_param_count", "ALL_CELLS",
+           "supported_cells", "train_input_specs", "prefill_input_specs",
+           "decode_input_specs"]

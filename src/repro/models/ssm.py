@@ -1,0 +1,258 @@
+"""Sub-quadratic sequence mixers: Mamba-2 (SSD) and RWKV-6 (Finch).
+
+Both are implemented in two forms sharing parameters:
+  * ``*_scan``  — chunked/parallel form for train & prefill (O(S) memory,
+    compilable at 32k-512k context),
+  * ``*_step``  — single-token recurrent form for decode (the "KV cache"
+    is a fixed-size state, independent of context length — this is why
+    these archs run the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, SSMConfig
+from .params import P
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_spec(cfg: ModelConfig) -> Dict[str, P]:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    return {
+        "in_proj": P((d, 2 * d_inner + 2 * s.d_state + H),
+                     ("embed", "ssm_in")),
+        "dt_bias": P((H,), ("ssm_heads",), init="zeros"),
+        "A_log": P((H,), ("ssm_heads",), init="zeros"),
+        "D": P((H,), ("ssm_heads",), init="ones"),
+        "norm": P((d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": P((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(a):
+    """a: (..., c) -> cumulative log-decay matrix L[i,j] = sum_{j<k<=i} a_k,
+    lower-triangular (-inf above diagonal)."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((c, c), bool), 0)
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def mamba2_scan(params, x, cfg: ModelConfig):
+    """Chunked SSD. x: (B, S, D) -> (B, S, D).  S % chunk == 0."""
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    d_inner = s.expand * D
+    hd, N = s.head_dim, s.d_state
+    H = d_inner // hd
+    c = min(s.chunk, S)
+    assert S % c == 0
+    nc = S // c
+
+    zxbcdt = x @ params["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N,
+                 2 * d_inner + 2 * N], axis=-1)
+    xs = xs.reshape(B, S, H, hd)
+    dt = jax.nn.softplus(dt.astype(f32) + params["dt_bias"].astype(f32))
+    A = -jnp.exp(params["A_log"].astype(f32))          # (H,) negative
+    a = dt * A                                          # (B,S,H) log decay
+    xdt = xs.astype(f32) * dt[..., None]                # input * dt
+
+    # chunk views
+    a_c = a.reshape(B, nc, c, H)
+    x_c = xdt.reshape(B, nc, c, H, hd)
+    B_c = Bm.reshape(B, nc, c, N).astype(f32)
+    C_c = Cm.reshape(B, nc, c, N).astype(f32)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(a_c.transpose(0, 1, 3, 2)))     # (B,nc,H,c,c)
+    y_diag = jnp.einsum("bzln,bzmn,bzhlm,bzmhp->bzlhp",
+                        C_c, B_c, L, x_c)
+    # 2) chunk-final states
+    a_sum = a_c.sum(axis=2)                             # (B,nc,H)
+    decay_states = jnp.exp(a_sum[:, :, None] - jnp.cumsum(a_c, axis=2))
+    states = jnp.einsum("bzln,bzlh,bzlhp->bzhpn", B_c, decay_states, x_c)
+    # 3) inter-chunk recurrence
+    def body(carry, inp):
+        st, (a_tot, s_new) = carry, inp
+        new = st * jnp.exp(a_tot)[..., None, None] + s_new
+        return new, st  # emit the state *entering* the chunk
+    init = jnp.zeros((B, H, hd, N), f32)
+    _, prev_states = jax.lax.scan(
+        body, init, (a_sum.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,hd,N)
+    # 4) state -> output contribution
+    decay_out = jnp.exp(jnp.cumsum(a_c, axis=2))        # (B,nc,c,H)
+    y_off = jnp.einsum("bzln,bzlh,bzhpn->bzlhp", C_c, decay_out,
+                       prev_states)
+    y = (y_diag + y_off).reshape(B, S, H, hd)
+    y = y + xs.astype(f32) * params["D"].astype(f32)[:, None]
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (Mamba-2 style)
+    y = y * jax.nn.silu(z.astype(f32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(f32)
+    return (y.astype(x.dtype)) @ params["out_proj"]
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return jnp.zeros((batch, H, s.head_dim, s.d_state), f32)
+
+
+def mamba2_step(params, x, state, cfg: ModelConfig):
+    """Decode step. x: (B, 1, D); state: (B,H,hd,N)."""
+    s: SSMConfig = cfg.ssm
+    B, _, D = x.shape
+    d_inner = s.expand * D
+    hd, N = s.head_dim, s.d_state
+    H = d_inner // hd
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N,
+                 2 * d_inner + 2 * N], axis=-1)
+    xs = xs.reshape(B, H, hd).astype(f32)
+    dt = jax.nn.softplus(dt.astype(f32) + params["dt_bias"].astype(f32))
+    A = -jnp.exp(params["A_log"].astype(f32))
+    decay = jnp.exp(dt * A)                              # (B,H)
+    xdt = xs * dt[..., None]
+    new_state = (state * decay[..., None, None]
+                 + jnp.einsum("bn,bhp->bhpn", Bm.astype(f32), xdt))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(f32), new_state)
+    y = y + xs * params["D"].astype(f32)[:, None]
+    y = y.reshape(B, d_inner)
+    y = y * jax.nn.silu(z.astype(f32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"].astype(f32)
+    return (y.astype(x.dtype) @ params["out_proj"])[:, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+def rwkv6_spec(cfg: ModelConfig) -> Dict[str, P]:
+    d = cfg.d_model
+    s: SSMConfig = cfg.ssm
+    hd = s.head_dim
+    H = d // hd
+    lora = 64
+    return {
+        "tm": {  # time-mix
+            "mu_r": P((d,), ("embed",), init="zeros"),
+            "mu_k": P((d,), ("embed",), init="zeros"),
+            "mu_v": P((d,), ("embed",), init="zeros"),
+            "mu_g": P((d,), ("embed",), init="zeros"),
+            "mu_w": P((d,), ("embed",), init="zeros"),
+            "wr": P((d, d), ("embed", "heads")),
+            "wk": P((d, d), ("embed", "heads")),
+            "wv": P((d, d), ("embed", "heads")),
+            "wg": P((d, d), ("embed", "heads")),
+            "w0": P((d,), ("heads_vec",), init="zeros"),
+            "w_lora_a": P((d, lora), ("embed", None)),
+            "w_lora_b": P((lora, d), (None, "heads")),
+            "u": P((H, hd), ("ssm_heads", None), init="zeros"),
+            "ln_scale": P((d,), ("embed",), init="ones"),
+            "wo": P((d, d), ("heads", "embed")),
+        },
+        "cm": {  # channel-mix
+            "mu_k": P((d,), ("embed",), init="zeros"),
+            "wk": P((d, cfg.d_ff), ("embed", "mlp")),
+            "wv": P((cfg.d_ff, d), ("mlp", "embed")),
+            "wr": P((d, d), ("embed", "heads")),
+        },
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """shifted[t] = x[t-1]; position 0 uses the carry (B, D)."""
+    shifted = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    return shifted
+
+
+def rwkv6_time_mix_scan(params, x, cfg: ModelConfig, x_last, state):
+    """x: (B,S,D); x_last: (B,D) carry; state: (B,H,hd,hd).
+    Returns (out, new_x_last, new_state)."""
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    hd = s.head_dim
+    H = D // hd
+    xs = _token_shift(x, x_last)
+
+    def mix(mu):
+        return x + (xs - x) * jax.nn.sigmoid(mu.astype(x.dtype))
+
+    r = (mix(params["mu_r"]) @ params["wr"]).reshape(B, S, H, hd)
+    k = (mix(params["mu_k"]) @ params["wk"]).reshape(B, S, H, hd)
+    v = (mix(params["mu_v"]) @ params["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu((mix(params["mu_g"]) @ params["wg"]).astype(f32))
+    xw = mix(params["mu_w"])
+    w = (params["w0"].astype(f32)
+         + (jnp.tanh((xw @ params["w_lora_a"]).astype(f32))
+            @ params["w_lora_b"].astype(f32)))
+    w = jnp.exp(-jnp.exp(w.reshape(B, S, H, hd).astype(f32)))  # decay in (0,1)
+
+    u = params["u"].astype(f32)
+
+    def step(carry, inp):
+        st = carry                                  # (B,H,hd,hd) [k,v]
+        r_t, k_t, v_t, w_t = inp                    # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, st + u[None, :, :] [..., None] * kv)
+        st = st * w_t[..., None] + kv
+        return st, out
+
+    seq = (r.transpose(1, 0, 2, 3).astype(f32),
+           k.transpose(1, 0, 2, 3).astype(f32),
+           v.transpose(1, 0, 2, 3).astype(f32),
+           w.transpose(1, 0, 2, 3))
+    new_state, outs = jax.lax.scan(step, state, seq)
+    y = outs.transpose(1, 0, 2, 3).reshape(B, S, D)  # (B,S,D)
+    # group norm per head (approx: rmsnorm over head dim), then gate
+    y = y.reshape(B, S, H, hd)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, D)
+    y = y * params["ln_scale"].astype(f32) * g
+    out = y.astype(x.dtype) @ params["wo"]
+    return out, x[:, -1], new_state
+
+
+def rwkv6_channel_mix(params, x, x_last):
+    xs = _token_shift(x, x_last)
+    xk = x + (xs - x) * jax.nn.sigmoid(params["mu_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu((xk @ params["wk"]).astype(f32)))
+    r = jax.nn.sigmoid((x @ params["wr"]).astype(f32))
+    return (r * (k.astype(x.dtype) @ params["wv"]).astype(f32)
+            ).astype(x.dtype), x[:, -1]
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int):
+    s: SSMConfig = cfg.ssm
+    hd = s.head_dim
+    H = cfg.d_model // hd
+    return {
+        "tm_state": jnp.zeros((batch, H, hd, hd), f32),
+        "tm_x": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "cm_x": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+__all__ = ["mamba2_spec", "mamba2_scan", "mamba2_step", "mamba2_init_state",
+           "rwkv6_spec", "rwkv6_time_mix_scan", "rwkv6_channel_mix",
+           "rwkv6_init_state"]

@@ -1,0 +1,317 @@
+"""Model assembly for all 10 assigned architectures.
+
+One functional decoder-LM core with per-family layer bodies:
+  dense / vlm      — GQA attention + SwiGLU
+  moe              — GQA attention + (shared + routed top-k) MoE
+  mla_moe          — Multi-head Latent Attention + MoE (DeepSeek-V2)
+  rwkv6            — RWKV-6 time-mix + channel-mix (attention-free)
+  hybrid           — Mamba-2 backbone + weight-shared attention block
+  encdec           — Whisper encoder-decoder (frontend stubbed)
+
+Layer stacks are ``lax.scan``-ed over a stacked parameter tree (leading
+'layers' axis) with per-layer ``jax.checkpoint`` (remat), which keeps both
+HLO size and activation memory O(1) in depth.  Decode threads a per-layer
+cache pytree through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import flags
+from . import layers as L
+from . import ssm as S
+from .config import ModelConfig, MoEConfig
+from .params import P, axes_tree, init_tree
+
+f32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def layer_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    """One decoder layer (pre-norm)."""
+    if cfg.family == "rwkv6":
+        return {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "ln2": L.rmsnorm_spec(cfg.d_model),
+            **S.rwkv6_spec(cfg),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ln1": L.rmsnorm_spec(cfg.d_model),
+            "mamba": S.mamba2_spec(cfg),
+        }
+    spec: Dict[str, Any] = {"ln1": L.rmsnorm_spec(cfg.d_model),
+                            "ln2": L.rmsnorm_spec(cfg.d_model)}
+    if cfg.family == "mla_moe":
+        spec["attn"] = L.mla_spec(cfg)
+    else:
+        spec["attn"] = L.attention_spec(cfg)
+    if cfg.moe is not None:
+        spec["ffn"] = L.moe_spec(cfg)
+    else:
+        spec["ffn"] = L.mlp_spec(cfg.d_model, cfg.d_ff)
+    return spec
+
+
+def shared_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    """Zamba2's weight-shared attention+MLP block."""
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "ffn": L.mlp_spec(cfg.d_model, cfg.d_ff),
+    }
+
+
+def encoder_layer_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "ffn": L.mlp_spec(cfg.d_model, cfg.d_ff),
+    }
+
+
+def decoder_xattn_layer_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln_x": L.rmsnorm_spec(cfg.d_model),
+        "xattn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "ffn": L.mlp_spec(cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "embedding": P((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       scale=1.0),
+        "final_norm": L.rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = P((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    if cfg.family == "encdec":
+        spec["enc_layers"] = encoder_layer_spec(cfg)      # stacked below
+        spec["dec_layers"] = decoder_xattn_layer_spec(cfg)
+        spec["enc_norm"] = L.rmsnorm_spec(cfg.d_model)
+    else:
+        spec["layers"] = layer_spec(cfg)
+    if cfg.family == "hybrid":
+        spec["shared"] = shared_block_spec(cfg)
+    return spec
+
+
+def _stack_spec(spec, n):
+    """Add a leading 'layers' axis to every leaf of a per-layer spec."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def stacked_model_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    spec = model_spec(cfg)
+    if cfg.family == "encdec":
+        spec["enc_layers"] = _stack_spec(spec["enc_layers"],
+                                         cfg.n_enc_layers)
+        spec["dec_layers"] = _stack_spec(spec["dec_layers"], cfg.n_layers)
+    else:
+        spec["layers"] = _stack_spec(spec["layers"], cfg.n_layers)
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.bfloat16):
+    return init_tree(stacked_model_spec(cfg), key, dtype)
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_tree(stacked_model_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ModelConfig, batch: int, seq: int,
+               mrope_positions: Optional[jax.Array]):
+    if cfg.mrope:
+        if mrope_positions is not None:
+            return mrope_positions              # (3, B, S) from frontend stub
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+
+
+def _decoder_layer_fwd(cfg: ModelConfig, params, x, positions):
+    """One pre-norm decoder layer; returns (x, aux)."""
+    x = flags.constrain(x, "batch", None, None)   # pin residual stream
+    aux = jnp.zeros((), f32)
+    if cfg.family == "rwkv6":
+        B, _, D = x.shape
+        st = S.rwkv6_init_state(cfg, B)
+        h, _, _ = S.rwkv6_time_mix_scan(
+            params["tm"], L.rmsnorm(params["ln1"], x), cfg,
+            st["tm_x"], st["tm_state"])
+        x = x + h
+        h, _ = S.rwkv6_channel_mix(
+            params["cm"], L.rmsnorm(params["ln2"], x), st["cm_x"])
+        return x + h, aux
+    if cfg.family == "hybrid":
+        h = S.mamba2_scan(params["mamba"], L.rmsnorm(params["ln1"], x), cfg)
+        return x + h, aux
+    if cfg.family == "mla_moe":
+        h = L.mla_apply(params["attn"], L.rmsnorm(params["ln1"], x),
+                        cfg, positions)
+    else:
+        h = L.attention_apply(params["attn"], L.rmsnorm(params["ln1"], x),
+                              cfg, positions)
+    x = x + h
+    h_in = L.rmsnorm(params["ln2"], x)
+    if cfg.moe is not None:
+        h, aux = L.moe_apply(params["ffn"], h_in, cfg)
+    else:
+        h = L.mlp_apply(params["ffn"], h_in)
+    return x + h, aux
+
+
+def _shared_block_fwd(cfg: ModelConfig, params, x, positions):
+    h = L.attention_apply(params["attn"], L.rmsnorm(params["ln1"], x),
+                          cfg, positions, window=cfg.sliding_window)
+    x = x + h
+    h = L.mlp_apply(params["ffn"], L.rmsnorm(params["ln2"], x))
+    return x + h
+
+
+def forward(params, tokens_or_embeds, cfg: ModelConfig, *,
+            mrope_positions: Optional[jax.Array] = None,
+            encoder_out: Optional[jax.Array] = None,
+            remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (hidden_states (B,S,D), aux_loss ())."""
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(params["embedding"], tokens_or_embeds, axis=0)
+    else:
+        x = tokens_or_embeds                    # stubbed frontend embeddings
+    B, Sq = x.shape[:2]
+    positions = _positions(cfg, B, Sq, mrope_positions)
+
+    if cfg.family == "encdec":
+        return _encdec_forward(params, x, cfg, encoder_out, remat)
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a = _decoder_layer_fwd(cfg, layer_params, x, positions)
+        return (x, aux + a), None
+
+    body_fn = flags.remat_wrap(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), f32)),
+                               params["layers"],
+                               unroll=flags.unroll(cfg.n_layers))
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, aux
+
+
+def hybrid_forward(params, tokens, cfg: ModelConfig, *, remat: bool = True):
+    """Zamba2: scan groups of `period` Mamba layers, shared attn between."""
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    B, Sq = x.shape[:2]
+    positions = _positions(cfg, B, Sq, None)
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    rem = cfg.n_layers - n_groups * period
+
+    def take_layers(lo, n):
+        return jax.tree.map(lambda a: a[lo:lo + n], params["layers"])
+
+    def mamba_body(x, layer_params):
+        h = S.mamba2_scan(layer_params["mamba"],
+                          L.rmsnorm(layer_params["ln1"], x), cfg)
+        return x + h, None
+
+    body_fn = flags.remat_wrap(mamba_body) if remat else mamba_body
+    for gi in range(n_groups):
+        x = _shared_block_fwd(cfg, params["shared"], x, positions)
+        x, _ = jax.lax.scan(body_fn, x, take_layers(gi * period, period),
+                            unroll=flags.unroll(period))
+    if rem:
+        x, _ = jax.lax.scan(body_fn, x, take_layers(n_groups * period, rem),
+                            unroll=flags.unroll(rem))
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, jnp.zeros((), f32)
+
+
+def _encdec_forward(params, dec_x, cfg, encoder_out, remat):
+    assert encoder_out is not None, "encdec needs encoder_out"
+    B, Sq = dec_x.shape[:2]
+    positions = _positions(cfg, B, Sq, None)
+    enc_positions = _positions(cfg, B, encoder_out.shape[1], None)
+
+    def body(x, lp):
+        h = L.attention_apply(lp["attn"], L.rmsnorm(lp["ln1"], x),
+                              cfg, positions)
+        x = x + h
+        # cross attention (bidirectional over encoder states)
+        xq = L.rmsnorm(lp["ln_x"], x)
+        hd = cfg.resolved_head_dim
+        q = (xq @ lp["xattn"]["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+        k = (encoder_out @ lp["xattn"]["wk"]).reshape(
+            B, -1, cfg.n_kv_heads, hd)
+        v = (encoder_out @ lp["xattn"]["wv"]).reshape(
+            B, -1, cfg.n_kv_heads, hd)
+        o = L.flash_attention(q, k, v, causal=False)
+        x = x + o.reshape(B, Sq, -1) @ lp["xattn"]["wo"]
+        h = L.mlp_apply(lp["ffn"], L.rmsnorm(lp["ln2"], x))
+        return x + h, None
+
+    body_fn = flags.remat_wrap(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, dec_x, params["dec_layers"],
+                        unroll=flags.unroll(cfg.n_layers))
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, jnp.zeros((), f32)
+
+
+def encode(params, frame_embeds, cfg: ModelConfig, *, remat: bool = True):
+    """Whisper encoder over stubbed frame embeddings (B, S, D)."""
+    x = frame_embeds
+    B, Sq = x.shape[:2]
+    positions = _positions(cfg, B, Sq, None)
+
+    def body(x, lp):
+        h_in = L.rmsnorm(lp["ln1"], x)
+        q, k, v = L.attention_qkv(lp["attn"], h_in, cfg, positions)
+        o = L.flash_attention(q, k, v, causal=False)
+        x = x + o.reshape(B, Sq, -1) @ lp["attn"]["wo"]
+        h = L.mlp_apply(lp["ffn"], L.rmsnorm(lp["ln2"], x))
+        return x + h, None
+
+    body_fn = flags.remat_wrap(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"],
+                        unroll=flags.unroll(cfg.n_enc_layers))
+    return L.rmsnorm(params["enc_norm"], x)
+
+
+def logits_fn(params, hidden, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return hidden @ params["embedding"].T
+    return hidden @ params["lm_head"]
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, **kw):
+    """tokens -> logits (B,S,V) in bf16 (cast to f32 at the loss)."""
+    if cfg.family == "hybrid":
+        hidden, aux = hybrid_forward(params, tokens, cfg)
+    else:
+        hidden, aux = forward(params, tokens, cfg, **kw)
+    return logits_fn(params, hidden, cfg), aux
+
+
+__all__ = ["model_spec", "stacked_model_spec", "init_params", "param_axes",
+           "forward", "hybrid_forward", "encode", "logits_fn", "lm_forward",
+           "layer_spec"]

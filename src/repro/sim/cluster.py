@@ -1,0 +1,187 @@
+"""Cluster model: hosts (PMs), GPUs, VMs — the paper's data-center state.
+
+Mirrors the two-level placement split of §8: an upper level chooses the
+host/GPU traversal order (the policies), while the lower level — block
+placement inside a GPU — is always NVIDIA's fixed default policy
+(``repro.core.mig.GPU.assign``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.mig import GPU, Profile
+
+
+@dataclasses.dataclass
+class VM:
+    """A MIG-enabled VM request (a 'pod' in the Alibaba trace mapping)."""
+    vm_id: int
+    profile: Profile
+    arrival: float          # hours
+    duration: float         # hours
+    cpu: float = 1.0
+    ram: float = 1.0
+    weight: float = 1.0     # a_i in Eq. (3)
+
+    @property
+    def departure(self) -> float:
+        return self.arrival + self.duration
+
+
+@dataclasses.dataclass
+class Host:
+    """A physical machine (PM) with 1-8 MIG-enabled GPUs."""
+    host_id: int
+    gpus: List[GPU]
+    cpu_capacity: float = 128.0
+    ram_capacity: float = 1024.0
+    cpu_used: float = 0.0
+    ram_used: float = 0.0
+    weight: float = 1.0     # b_j in Eq. (4)
+
+    def fits_host(self, vm: VM) -> bool:
+        return (self.cpu_used + vm.cpu <= self.cpu_capacity
+                and self.ram_used + vm.ram <= self.ram_capacity)
+
+    @property
+    def is_active(self) -> bool:
+        """phi_j: powered on iff any GPU hosts a VM."""
+        return any(not g.is_empty for g in self.gpus)
+
+    @property
+    def active_gpus(self) -> int:
+        """sum_k gamma_jk."""
+        return sum(1 for g in self.gpus if not g.is_empty)
+
+
+class Cluster:
+    """Data-center state + placement bookkeeping."""
+
+    def __init__(self, hosts: List[Host]):
+        self.hosts = hosts
+        # GPU.global_index -> (host, gpu); also provides the orderly
+        # first-fit traversal used by every policy and by GRMU's pool.
+        self.gpu_index: Dict[int, Tuple[Host, GPU]] = {}
+        idx = 0
+        for h in hosts:
+            for g in h.gpus:
+                g.global_index = idx
+                self.gpu_index[idx] = (h, g)
+                idx += 1
+        self.placements: Dict[int, Tuple[Host, GPU]] = {}  # vm_id -> loc
+        self.vms: Dict[int, VM] = {}
+        # Vectorized mirror of per-GPU free-block masks (kept in sync by
+        # every mutation below); policies scan this instead of objects.
+        self.free_masks = np.full(len(self.gpu_index), 255, dtype=np.uint8)
+        # Vectorized host headroom, indexed by gpu global_index's host.
+        self.gpu_host_id = np.array(
+            [self.gpu_index[i][0].host_id for i in range(len(self.gpu_index))],
+            dtype=np.int32)
+
+    def _sync(self, gpu: GPU) -> None:
+        self.free_masks[gpu.global_index] = gpu.free_mask()
+
+    def host_fits_vec(self, vm: VM) -> np.ndarray:
+        """Boolean per-GPU vector: does the owning host fit ``vm``?"""
+        ok = np.array([h.fits_host(vm) for h in self.hosts], dtype=bool)
+        return ok[self.gpu_host_id]
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def num_gpus(self) -> int:
+        return len(self.gpu_index)
+
+    def all_gpus(self) -> Iterator[GPU]:
+        for i in range(self.num_gpus):
+            yield self.gpu_index[i][1]
+
+    def host_of_gpu(self, gpu: GPU) -> Host:
+        return self.gpu_index[gpu.global_index][0]
+
+    def active_hardware(self) -> Tuple[int, int]:
+        """(active PMs, active GPUs) per Eq. (4)'s phi/gamma convention."""
+        pms = sum(1 for h in self.hosts if h.is_active)
+        gpus = sum(h.active_gpus for h in self.hosts)
+        return pms, gpus
+
+    def active_hardware_rate(self) -> float:
+        pms, gpus = self.active_hardware()
+        return (pms + gpus) / (len(self.hosts) + self.num_gpus)
+
+    # -- mutation ---------------------------------------------------------
+    def place(self, vm: VM, gpu: GPU) -> Optional[int]:
+        """Try to place ``vm`` on ``gpu`` with the default block policy.
+        Returns the start block, or None (GPU full / host resources)."""
+        host = self.host_of_gpu(gpu)
+        if not host.fits_host(vm):
+            return None
+        start = gpu.assign(vm.vm_id, vm.profile)
+        if start is None:
+            return None
+        host.cpu_used += vm.cpu
+        host.ram_used += vm.ram
+        self.placements[vm.vm_id] = (host, gpu)
+        self.vms[vm.vm_id] = vm
+        self._sync(gpu)
+        return start
+
+    def place_at(self, vm: VM, gpu: GPU, start: int) -> None:
+        host = self.host_of_gpu(gpu)
+        gpu.assign_at(vm.vm_id, vm.profile, start)
+        host.cpu_used += vm.cpu
+        host.ram_used += vm.ram
+        self.placements[vm.vm_id] = (host, gpu)
+        self.vms[vm.vm_id] = vm
+        self._sync(gpu)
+
+    def release(self, vm_id: int) -> None:
+        host, gpu = self.placements.pop(vm_id)
+        vm = self.vms.pop(vm_id)
+        gpu.release(vm_id)
+        host.cpu_used -= vm.cpu
+        host.ram_used -= vm.ram
+        self._sync(gpu)
+
+    def migrate_intra(self, vm_id: int, new_start: int) -> None:
+        """Intra-GPU migration: move a VM's GI to a new start block."""
+        host, gpu = self.placements[vm_id]
+        vm = self.vms[vm_id]
+        gpu.release(vm_id)
+        gpu.assign_at(vm_id, vm.profile, new_start)
+        self._sync(gpu)
+
+    def migrate_inter(self, vm_id: int, dst: GPU) -> bool:
+        """Inter-GPU migration (live migration of VM + its GI)."""
+        vm = self.vms[vm_id]
+        src_host, src_gpu = self.placements[vm_id]
+        dst_host = self.host_of_gpu(dst)
+        if dst_host is not src_host and not dst_host.fits_host(vm):
+            return False
+        start = dst.assign(vm_id, vm.profile)
+        if start is None:
+            return False
+        src_gpu.release(vm_id)
+        if dst_host is not src_host:
+            src_host.cpu_used -= vm.cpu
+            src_host.ram_used -= vm.ram
+            dst_host.cpu_used += vm.cpu
+            dst_host.ram_used += vm.ram
+        self.placements[vm_id] = (dst_host, dst)
+        self._sync(src_gpu)
+        self._sync(dst)
+        return True
+
+
+def make_cluster(gpu_counts: List[int], cpu: float = 128.0,
+                 ram: float = 1024.0) -> Cluster:
+    """Build a cluster from a per-host GPU-count list."""
+    hosts = []
+    for hid, n in enumerate(gpu_counts):
+        hosts.append(Host(hid, [GPU() for _ in range(n)], cpu, ram))
+    return Cluster(hosts)
+
+
+__all__ = ["VM", "Host", "Cluster", "make_cluster"]

@@ -1,0 +1,78 @@
+"""Metrics collection matching the paper's evaluation (§8)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from ..core.mig import PROFILES
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    total_requests: int = 0
+    accepted: int = 0
+    rejected: int = 0
+    per_profile_total: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {p.name: 0 for p in PROFILES})
+    per_profile_accepted: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {p.name: 0 for p in PROFILES})
+    hourly_times: List[float] = dataclasses.field(default_factory=list)
+    hourly_acceptance: List[float] = dataclasses.field(default_factory=list)
+    hourly_active_hw: List[float] = dataclasses.field(default_factory=list)
+    migrations: int = 0
+    intra_migrations: int = 0
+    inter_migrations: int = 0
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def overall_acceptance_rate(self) -> float:
+        return self.accepted / max(1, self.total_requests)
+
+    @property
+    def average_active_hw_rate(self) -> float:
+        """Mean of hourly active-hardware rates (§8.2.1)."""
+        return float(np.mean(self.hourly_active_hw)) if self.hourly_active_hw else 0.0
+
+    @property
+    def active_hw_auc(self) -> float:
+        """Area under the active-hardware curve (Table 6)."""
+        if len(self.hourly_times) < 2:
+            return 0.0
+        return float(np.trapezoid(self.hourly_active_hw, self.hourly_times))
+
+    def per_profile_acceptance_rate(self) -> Dict[str, float]:
+        return {name: (self.per_profile_accepted[name]
+                       / max(1, self.per_profile_total[name]))
+                for name in self.per_profile_total}
+
+    @property
+    def average_profile_acceptance(self) -> float:
+        """Mean of per-profile acceptance rates (blue line, Fig. 8) over
+        profiles that actually occur in the workload."""
+        rates = [v for k, v in self.per_profile_acceptance_rate().items()
+                 if self.per_profile_total[k] > 0]
+        return float(np.mean(rates)) if rates else 0.0
+
+    @property
+    def migration_fraction(self) -> float:
+        """Migrations as a fraction of accepted VMs (§8.3.3)."""
+        return self.migrations / max(1, self.accepted)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "total": self.total_requests,
+            "accepted": self.accepted,
+            "acceptance_rate": round(self.overall_acceptance_rate, 4),
+            "avg_profile_acceptance": round(self.average_profile_acceptance, 4),
+            "avg_active_hw_rate": round(self.average_active_hw_rate, 4),
+            "active_hw_auc": round(self.active_hw_auc, 2),
+            "migrations": self.migrations,
+            "migration_fraction": round(self.migration_fraction, 4),
+        }
+
+
+__all__ = ["SimResult"]

@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping — fp32 moments over bf16 params.
+
+Functional (no optax dependency): ``adamw_init`` / ``adamw_update`` over
+arbitrary pytrees.  Moment tensors inherit the parameter sharding (same
+tree structure), so ZeRO-style placement falls out of the sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(f32) ** 2) for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state: OptState, params
+                 ) -> Tuple[Any, OptState, jax.Array]:
+    """Returns (new_params, new_opt_state, pre-clip grad norm)."""
+    step = opt_state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(cfg, opt_state.step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(f32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(f32)
+
+    def upd(p, g, m, v):
+        g = g.astype(f32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(f32)
+        p_new = p.astype(f32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state.m)
+    flat_v = treedef.flatten_up_to(opt_state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), gnorm
+
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "global_norm"]

@@ -1,0 +1,142 @@
+"""Synthetic Alibaba-2023-shaped workload (paper §8.1).
+
+The real cluster-trace-gpu-v2023 is not available offline; this module
+generates a trace with the same published shape — 1,213 GPU hosts with 1-8
+GPUs each, 8,063 MIG-mapped VMs — and implements the paper's pod→profile
+mapping math (Eqs. 27-30) and the IQR arrival-outlier filter verbatim, so
+swapping in the real CSVs later only changes the ``raw_pods`` source.
+
+Profile mix approximates Fig. 5 (7g.40gb-dominant with a small-profile
+tail).  Absolute metric values therefore differ from the paper; the
+reproduction targets the paper's relative claims (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from ..core.mig import PROFILES, PROFILE_BY_NAME
+from ..sim.cluster import VM, Cluster, make_cluster
+
+# ---------------------------------------------------------------------------
+# Eqs. 27-30: pod GPU requirement -> nearest MIG profile
+# ---------------------------------------------------------------------------
+
+# U_k = compute_k x memory_k (fractions of a full A100), Eq. 28.
+_PROFILE_U = np.array([
+    (p.compute / 7.0) * (p.size / 8.0) for p in PROFILES
+])
+_PROFILE_U_HAT = _PROFILE_U / _PROFILE_U.max()          # Eq. 29
+
+
+def map_gpu_requirement_to_profile(u: np.ndarray,
+                                   u_max: Optional[float] = None
+                                   ) -> np.ndarray:
+    """Eq. 27 + Eq. 30: normalize pod GPU requirements and return the index
+    of the closest profile (by normalized combined value)."""
+    u = np.asarray(u, dtype=np.float64)
+    u_hat = u / (u_max if u_max is not None else u.max())  # Eq. 27
+    # Eq. 30: argmin_k | U_hat_k - u_hat |
+    return np.argmin(np.abs(_PROFILE_U_HAT[None, :] - u_hat[:, None]), axis=1)
+
+
+def iqr_filter(values: np.ndarray) -> np.ndarray:
+    """§8.1 IQR outlier removal: keep values within [Q1-1.5*IQR, Q3+1.5*IQR]."""
+    q1, q3 = np.percentile(values, [25, 75])
+    iqr = q3 - q1
+    lo, hi = q1 - 1.5 * iqr, q3 + 1.5 * iqr
+    return values[(values >= lo) & (values <= hi)]
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+# Fig. 5 profile mix (estimated from the bar chart; 7g.40gb dominant).
+# Calibrated so the paper's evaluation regime emerges: demand >> capacity
+# with both baskets saturating (see EXPERIMENTS.md §Workload calibration).
+FIG5_PROFILE_MIX = {
+    "1g.5gb": 0.1856,
+    "1g.10gb": 0.0638,
+    "2g.10gb": 0.1566,
+    "3g.20gb": 0.1160,
+    "4g.20gb": 0.0580,
+    "7g.40gb": 0.4200,
+}
+
+# Host GPU-count mix: Alibaba nodes carry 1-8 GPUs (trace skews small).
+HOST_GPU_MIX = {1: 0.70, 2: 0.20, 4: 0.10}
+
+
+@dataclasses.dataclass
+class TraceConfig:
+    n_hosts: int = 1213
+    n_vms: int = 8063
+    horizon_hours: float = 720.0          # ~30 days
+    # Alibaba-2023 pods are long-running (weeks+); with a 720 h horizon the
+    # lognormal below makes most accepted VMs effectively resident, which is
+    # what produces the paper's overload regime (39% overall acceptance).
+    mean_duration_hours: float = 3000.0
+    duration_sigma: float = 1.0
+    seed: int = 0
+    # Scale knobs for fast tests / sweeps:
+    scale: float = 1.0                    # scales hosts & VMs together
+
+
+def generate(cfg: TraceConfig = TraceConfig()) -> Tuple[Cluster, List[VM]]:
+    rng = np.random.default_rng(cfg.seed)
+    n_hosts = max(2, int(cfg.n_hosts * cfg.scale))
+    n_vms = max(10, int(cfg.n_vms * cfg.scale))
+
+    # --- hosts -----------------------------------------------------------
+    counts = np.array(list(HOST_GPU_MIX.keys()))
+    probs = np.array(list(HOST_GPU_MIX.values()))
+    gpu_counts = rng.choice(counts, size=n_hosts, p=probs / probs.sum())
+    cluster = make_cluster([int(c) for c in gpu_counts])
+
+    # --- arrivals: bursty Poisson mixture, then the paper's IQR filter ----
+    # Oversample, IQR-filter inter-arrivals, then trim to n_vms.
+    n_raw = int(n_vms * 1.25)
+    # Diurnal intensity: base Poisson + bursts.
+    inter = rng.exponential(cfg.horizon_hours / n_raw, size=n_raw)
+    burst = rng.random(n_raw) < 0.05
+    inter[burst] *= 8.0                                   # heavy-tail outliers
+    inter = iqr_filter(inter)
+    if inter.size < n_vms:                                # top up if over-cut
+        extra = rng.exponential(np.median(inter), size=n_vms - inter.size)
+        inter = np.concatenate([inter, extra])
+    arrivals = np.cumsum(inter[:n_vms])
+    arrivals = arrivals / arrivals.max() * cfg.horizon_hours
+
+    # --- pod GPU requirements -> profiles (Eqs. 27-30) --------------------
+    # Draw raw utilization u near each profile's U_k with Fig. 5 weights,
+    # then push through the *actual mapping math* so Eqs. 27-30 are
+    # exercised end to end.
+    names = list(FIG5_PROFILE_MIX.keys())
+    mix = np.array([FIG5_PROFILE_MIX[n] for n in names])
+    target_idx = rng.choice(len(names), size=n_vms, p=mix / mix.sum())
+    base_u = np.array([_PROFILE_U_HAT[PROFILES.index(PROFILE_BY_NAME[n])]
+                       for n in names])
+    u = base_u[target_idx] * np.exp(rng.normal(0.0, 0.08, size=n_vms))
+    u = np.clip(u, 1e-4, 1.0)
+    prof_idx = map_gpu_requirement_to_profile(u, u_max=1.0)
+
+    # --- durations: heavy-tailed lognormal --------------------------------
+    mu = np.log(cfg.mean_duration_hours) - 0.5 * cfg.duration_sigma ** 2
+    durations = rng.lognormal(mu, cfg.duration_sigma, size=n_vms)
+    durations = np.clip(durations, 0.5, None)
+
+    vms = [
+        VM(vm_id=i, profile=PROFILES[int(prof_idx[i])],
+           arrival=float(arrivals[i]), duration=float(durations[i]),
+           cpu=1.0 + 2.0 * PROFILES[int(prof_idx[i])].compute / 7.0,
+           ram=4.0 + 28.0 * PROFILES[int(prof_idx[i])].size / 8.0)
+        for i in range(n_vms)
+    ]
+    return cluster, vms
+
+
+__all__ = ["TraceConfig", "generate", "map_gpu_requirement_to_profile",
+           "iqr_filter", "FIG5_PROFILE_MIX", "HOST_GPU_MIX"]

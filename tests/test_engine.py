@@ -1,0 +1,112 @@
+"""Engine + workload tests (departures, metrics, Eqs. 27-30, IQR filter)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mig import PROFILES, PROFILE_BY_NAME
+from repro.core.policies import FirstFit
+from repro.sim.cluster import VM, make_cluster
+from repro.sim.engine import simulate
+from repro.workload.alibaba import (FIG5_PROFILE_MIX, TraceConfig,
+                                    generate, iqr_filter,
+                                    map_gpu_requirement_to_profile)
+
+
+def test_departures_free_capacity():
+    """A 1-GPU cluster: second 7g.40gb fits only after the first departs."""
+    cluster = make_cluster([1])
+    vms = [VM(0, PROFILE_BY_NAME["7g.40gb"], arrival=0.0, duration=2.0),
+           VM(1, PROFILE_BY_NAME["7g.40gb"], arrival=1.0, duration=2.0),
+           VM(2, PROFILE_BY_NAME["7g.40gb"], arrival=5.0, duration=2.0)]
+    res = simulate(cluster, FirstFit(cluster), vms, horizon=10.0)
+    assert res.total_requests == 3
+    assert res.accepted == 2           # VM1 overlaps VM0 -> rejected
+    assert res.rejected == 1
+    assert res.per_profile_accepted["7g.40gb"] == 2
+
+
+def test_rejection_is_final_no_requeue():
+    cluster = make_cluster([1])
+    vms = [VM(0, PROFILE_BY_NAME["7g.40gb"], arrival=0.0, duration=1.0),
+           VM(1, PROFILE_BY_NAME["7g.40gb"], arrival=0.5, duration=1.0)]
+    res = simulate(cluster, FirstFit(cluster), vms, horizon=5.0)
+    assert res.accepted == 1 and res.rejected == 1
+    # after VM0 departs the GPU is idle: active hw drops back to 0
+    assert res.hourly_active_hw[-1] == 0.0
+
+
+def test_active_hardware_rate_definition():
+    """phi + gamma convention: 1 host with 2 GPUs, one GPU busy ->
+    (1 active PM + 1 active GPU) / (1 PM + 2 GPUs) = 2/3."""
+    cluster = make_cluster([2])
+    vm = VM(0, PROFILE_BY_NAME["1g.5gb"], 0.0, 10.0)
+    cluster.place(vm, cluster.gpu_index[0][1])
+    assert cluster.active_hardware() == (1, 1)
+    assert cluster.active_hardware_rate() == pytest.approx(2 / 3)
+
+
+def test_hourly_metrics_lengths():
+    cluster = make_cluster([2, 2])
+    vms = [VM(i, PROFILE_BY_NAME["1g.5gb"], arrival=float(i), duration=3.0)
+           for i in range(5)]
+    res = simulate(cluster, FirstFit(cluster), vms, horizon=8.0)
+    assert len(res.hourly_times) == len(res.hourly_acceptance) \
+        == len(res.hourly_active_hw) == 9  # t = 0..8
+
+
+# ---------------------------------------------------------------------------
+# Workload (§8.1)
+# ---------------------------------------------------------------------------
+
+def test_profile_mapping_eq27_30_exact_profiles():
+    """A pod requiring exactly a profile's combined value maps to it
+    (ties broken toward the first/lowest profile by argmin)."""
+    U = np.array([(p.compute / 7.0) * (p.size / 8.0) for p in PROFILES])
+    idx = map_gpu_requirement_to_profile(U / U.max(), u_max=1.0)
+    # 1g.10gb (2/56) and 2g.10gb (4/56) are distinct; each maps to itself.
+    for i, p in enumerate(PROFILES):
+        assert PROFILES[idx[i]].name == p.name
+
+
+def test_profile_mapping_monotone():
+    """Larger GPU requirements never map to smaller-value profiles."""
+    u = np.linspace(1e-3, 1.0, 200)
+    idx = map_gpu_requirement_to_profile(u, u_max=1.0)
+    U = np.array([(p.compute / 7.0) * (p.size / 8.0) for p in PROFILES])
+    vals = (U / U.max())[idx]
+    assert (np.diff(vals) >= 0).all()
+
+
+def test_iqr_filter():
+    vals = np.array([1.0] * 50 + [2.0] * 50 + [100.0, -50.0])
+    kept = iqr_filter(vals)
+    assert 100.0 not in kept and -50.0 not in kept
+    assert len(kept) == 100
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_generate_trace_invariants(seed):
+    cfg = TraceConfig(scale=0.02, seed=seed)
+    cluster, vms = generate(cfg)
+    assert cluster.num_gpus >= len(cluster.hosts)
+    assert all(1 <= len(h.gpus) <= 8 for h in cluster.hosts)
+    assert all(0 <= v.arrival <= cfg.horizon_hours for v in vms)
+    assert all(v.duration > 0 for v in vms)
+    names = {p.name for p in PROFILES}
+    assert all(v.profile.name in names for v in vms)
+
+
+def test_generate_profile_mix_close_to_fig5():
+    cluster, vms = generate(TraceConfig(scale=0.5, seed=0))
+    from collections import Counter
+    counts = Counter(v.profile.name for v in vms)
+    for name, frac in FIG5_PROFILE_MIX.items():
+        got = counts[name] / len(vms)
+        assert abs(got - frac) < 0.05, (name, got, frac)
+
+
+def test_full_shape_numbers():
+    """§8.1: 1,213 GPU-equipped hosts and 8,063 MIG-enabled VMs."""
+    cfg = TraceConfig()
+    assert cfg.n_hosts == 1213 and cfg.n_vms == 8063

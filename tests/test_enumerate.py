@@ -1,0 +1,92 @@
+"""Configuration-space counts from paper §5.1 — exact reproduction tests."""
+import pytest
+
+from repro.core.enumerate import (all_configurations, config_cc,
+                                  default_policy_reachable, free_blocks,
+                                  gi_multiset, is_terminal,
+                                  per_profile_capacity,
+                                  suboptimal_configurations, summary,
+                                  terminal_configurations)
+
+
+def test_723_unique_configurations():
+    """§5.1: 'The finalized tree encompasses 723 unique configurations.'"""
+    assert len(all_configurations()) == 723
+
+
+def test_78_terminal_configurations():
+    """§3/§5.1: '78 valid combinations' / '78 terminal nodes'."""
+    assert len(terminal_configurations()) == 78
+    for c in terminal_configurations():
+        assert is_terminal(c)
+
+
+def test_482_suboptimal_arrangements():
+    """§5.1: '67% of the 723 configurations, or 482 in total, are in
+    suboptimal arrangements'."""
+    sub = suboptimal_configurations()
+    assert len(sub) == 482
+    assert round(100 * len(sub) / 723) == 67
+
+
+def test_terminal_configs_are_packings():
+    """Terminal configs can accept no further GI: CC of free blocks == 0."""
+    for c in terminal_configurations():
+        assert config_cc(c) == 0
+
+
+def test_default_policy_reachable_bounds():
+    """The paper reports 248 default-policy configurations; the exact count
+    depends on an unspecified driver tie-break.  Our deterministic
+    first-maximizer policy reaches 179 and the any-tie closure reaches 297,
+    bracketing the paper's 248 (see DESIGN.md repro notes)."""
+    first = default_policy_reachable(explore_ties=False)
+    anytie = default_policy_reachable(explore_ties=True)
+    assert len(first) == 179
+    assert len(anytie) == 297
+    assert first <= anytie
+    assert len(first) <= 248 <= len(anytie)
+    assert anytie <= all_configurations()
+
+
+def test_suboptimality_is_about_arrangement_not_content():
+    """A suboptimal config has a same-multiset sibling with higher CC."""
+    sub = suboptimal_configurations()
+    allc = all_configurations()
+    some = list(sub)[:25]
+    for c in some:
+        siblings = [d for d in allc if gi_multiset(d) == gi_multiset(c)]
+        assert max(config_cc(d) for d in siblings) > config_cc(c)
+
+
+def test_table3_per_profile_capacity_tradeoff():
+    """Fig. 3 / Table 3: two same-CC configurations of the same multiset can
+    differ in per-profile capacity (more 1g.10gb at the cost of 4g.20gb)."""
+    # Find a same-multiset pair with equal CC but different capacity vectors.
+    from collections import defaultdict
+    groups = defaultdict(list)
+    for c in all_configurations():
+        groups[gi_multiset(c)].append(c)
+    found = False
+    for cs in groups.values():
+        if len(cs) < 2:
+            continue
+        by_cc = defaultdict(list)
+        for c in cs:
+            by_cc[config_cc(c)].append(c)
+        for cc_val, same_cc in by_cc.items():
+            caps = {tuple(sorted(per_profile_capacity(c).items()))
+                    for c in same_cc}
+            if len(caps) > 1:
+                found = True
+                break
+        if found:
+            break
+    assert found, "no same-CC capacity trade-off found (contradicts Table 3)"
+
+
+def test_summary_keys():
+    s = summary()
+    assert s["unique_configurations"] == 723
+    assert s["terminal_configurations"] == 78
+    assert s["suboptimal_configurations"] == 482

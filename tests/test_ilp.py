@@ -1,0 +1,145 @@
+"""ILP (§6) validation: grammar exactness, objectives, oracle comparisons."""
+import pytest
+
+from repro.core.ilp import MigILP, validate_solution
+from repro.core.mig import PROFILE_BY_NAME, PROFILES
+from repro.sim.cluster import VM
+
+
+def mkvm(i, name, weight=1.0):
+    return VM(vm_id=i, profile=PROFILE_BY_NAME[name], arrival=0.0,
+              duration=1e9, cpu=0.0, ram=0.0, weight=weight)
+
+
+def test_seven_small_slices_fill_one_gpu():
+    ilp = MigILP(pm_gpus=[1])
+    vms = [mkvm(i, "1g.5gb") for i in range(7)]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 7
+    assert validate_solution(res, vms, [1])
+    starts = sorted(z for (_, _, z) in res.accepted.values())
+    assert starts == [0, 1, 2, 3, 4, 5, 6]  # block 7 unusable for 1g.5gb
+
+
+def test_start_block_grammar_4g20gb():
+    """Two 4g.20gb cannot share a GPU: both must start at block 0."""
+    ilp = MigILP(pm_gpus=[1])
+    vms = [mkvm(0, "4g.20gb"), mkvm(1, "4g.20gb")]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 1 and len(res.rejected) == 1
+    assert validate_solution(res, vms, [1])
+
+
+def test_start_block_grammar_3g20gb_pair():
+    """Two 3g.20gb DO share a GPU (starts 0 and 4)."""
+    ilp = MigILP(pm_gpus=[1])
+    vms = [mkvm(0, "3g.20gb"), mkvm(1, "3g.20gb")]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 2
+    starts = sorted(z for (_, _, z) in res.accepted.values())
+    assert starts == [0, 4]
+    assert validate_solution(res, vms, [1])
+
+
+def test_ilp_beats_greedy_fragmentation():
+    """1g.10gb needs even starts; ILP packs 4 of them + no waste where a
+    careless arrangement couldn't."""
+    ilp = MigILP(pm_gpus=[1])
+    vms = [mkvm(i, "1g.10gb") for i in range(4)]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 4
+    assert validate_solution(res, vms, [1])
+
+
+def test_hardware_minimization_consolidates():
+    """Two small VMs across 2 PMs x 2 GPUs: optimal uses 1 PM, 1 GPU."""
+    ilp = MigILP(pm_gpus=[2, 2])
+    vms = [mkvm(0, "1g.5gb"), mkvm(1, "1g.5gb")]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 2
+    assert res.active_pms == 1
+    assert res.active_gpus == 1
+    assert validate_solution(res, vms, [2, 2])
+
+
+def test_acceptance_dominates_hardware():
+    """w_accept >> w_hw: accepting a VM on a second PM beats rejecting it."""
+    ilp = MigILP(pm_gpus=[1, 1])
+    vms = [mkvm(0, "7g.40gb"), mkvm(1, "7g.40gb")]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 2
+    assert res.active_pms == 2
+
+
+def test_vm_weights_prioritize_large():
+    """a_i ranking (§6): when only one of two VMs fits, take the heavy one."""
+    ilp = MigILP(pm_gpus=[1])
+    heavy = mkvm(0, "7g.40gb", weight=5.0)
+    small = mkvm(1, "1g.5gb", weight=1.0)
+    ilp.add_vm(heavy)
+    ilp.add_vm(small)
+    res = ilp.solve()
+    assert res.ok
+    assert 0 in res.accepted and 1 in res.rejected
+
+
+def test_migration_enables_acceptance():
+    """A resident 3g.20gb at start 0 blocks a 4g.20gb; migrating it to
+    start 4 admits both.  delta=1 counts the move; new VM has delta=0."""
+    ilp = MigILP(pm_gpus=[1], w_mig=1.0)
+    resident = mkvm(0, "3g.20gb")
+    new = mkvm(1, "4g.20gb")
+    ilp.add_vm(resident, resident_at=(0, 0, 0), delta=1.0)
+    ilp.add_vm(new)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 2
+    assert res.accepted[0][2] == 4      # resident moved to start 4
+    assert res.accepted[1][2] == 0
+    # same GPU => no PM/GPU reassignment migration flags for the resident
+    assert res.migrations_pm == 0 and res.migrations_gpu == 0
+
+
+def test_migration_cost_suppresses_pointless_moves():
+    """With no pressure, the resident keeps its PM and GPU.  NOTE: Eq. (5)
+    penalizes only PM (m_ij) and GPU (omega_ijk) reassignment — a pure
+    z-block move inside the same GPU is free in the paper's model, so we
+    assert on (pm, gpu) but not on z."""
+    ilp = MigILP(pm_gpus=[2])
+    resident = mkvm(0, "1g.5gb")
+    ilp.add_vm(resident, resident_at=(0, 0, 6), delta=1.0)
+    res = ilp.solve()
+    assert res.ok and res.accepted[0][:2] == (0, 0)
+    assert res.migrations_pm == 0 and res.migrations_gpu == 0
+
+
+def test_ilp_oracle_vs_grmu_small_instance():
+    """ILP acceptance >= GRMU acceptance on a batch instance (optimality)."""
+    from repro.core.grmu import GRMU
+    from repro.sim.cluster import make_cluster
+    names = ["7g.40gb", "3g.20gb", "3g.20gb", "2g.10gb", "1g.10gb",
+             "1g.5gb", "1g.5gb", "4g.20gb"]
+    # GRMU (online, no lookahead)
+    cluster = make_cluster([2, 1])
+    pol = GRMU(cluster, heavy_capacity_frac=0.4)
+    grmu_accepted = sum(pol.place(mkvm(i, nm)) for i, nm in enumerate(names))
+    # ILP (offline batch)
+    ilp = MigILP(pm_gpus=[2, 1])
+    vms = [mkvm(i, nm) for i, nm in enumerate(names)]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok
+    assert validate_solution(res, vms, [2, 1])
+    assert len(res.accepted) >= grmu_accepted

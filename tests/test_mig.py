@@ -1,0 +1,157 @@
+"""Tests for the MIG model (paper §3, §5, Table 1, Fig. 1-3, Table 3)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mig import (FULL_GPU, NUM_BLOCKS, NUM_SLOTS, PROFILES,
+                            PROFILE_BY_NAME, GPU, available_starts,
+                            blocks_of, fragmentation, get_cc,
+                            gpu_from_free_mask)
+
+
+def test_profile_table():
+    """Table 1: profiles, sizes, compute engines, instance counts."""
+    expect = {
+        "1g.5gb": (1, 1, 7), "1g.10gb": (2, 1, 4), "2g.10gb": (2, 2, 3),
+        "3g.20gb": (4, 3, 2), "4g.20gb": (4, 4, 1), "7g.40gb": (8, 7, 1),
+    }
+    assert len(PROFILES) == 6
+    for p in PROFILES:
+        size, compute, instances = expect[p.name]
+        assert p.size == size
+        assert p.compute == compute
+        assert len(p.start_blocks) == instances
+
+
+def test_table5_parameters():
+    """Table 5: g_i (size) and s_i (last permissible start index)."""
+    s_i = {"1g.5gb": 6, "1g.10gb": 6, "2g.10gb": 4, "3g.20gb": 4,
+           "4g.20gb": 0, "7g.40gb": 0}
+    for p in PROFILES:
+        assert p.last_start == s_i[p.name]
+
+
+def test_empty_gpu_cc():
+    """An empty GPU supports every (profile, start) slot: CC = 18."""
+    assert get_cc(FULL_GPU) == NUM_SLOTS == 18
+
+
+def test_fig2b_cc_example():
+    """Fig. 2(b): free = {1,2,4,5,6,7} has CC = 9."""
+    G = frozenset({1, 2, 4, 5, 6, 7})
+    assert get_cc(G) == 9
+    # breakdown: 5x 1g.5gb, 2x 1g.10gb, 1x 2g.10gb, 1x 3g.20gb
+    assert len(available_starts(G, PROFILE_BY_NAME["1g.5gb"])) == 5
+    assert len(available_starts(G, PROFILE_BY_NAME["1g.10gb"])) == 2
+    assert len(available_starts(G, PROFILE_BY_NAME["2g.10gb"])) == 1
+    assert len(available_starts(G, PROFILE_BY_NAME["3g.20gb"])) == 1
+    assert len(available_starts(G, PROFILE_BY_NAME["4g.20gb"])) == 0
+    assert len(available_starts(G, PROFILE_BY_NAME["7g.40gb"])) == 0
+
+
+def test_fig2a_fragmentation_scenario():
+    """Fig. 2(a): non-contiguous single free blocks block 2-block profiles."""
+    g = GPU()
+    # Occupy blocks so that free blocks are isolated: e.g. free = {1, 3}
+    g.assign_at("a", PROFILE_BY_NAME["1g.5gb"], 0)
+    g.assign_at("b", PROFILE_BY_NAME["1g.5gb"], 2)
+    g.assign_at("c", PROFILE_BY_NAME["3g.20gb"], 4)
+    assert g.free == frozenset({1, 3})
+    assert not g.fits(PROFILE_BY_NAME["1g.10gb"])
+    assert not g.fits(PROFILE_BY_NAME["2g.10gb"])
+    assert g.fits(PROFILE_BY_NAME["1g.5gb"])
+
+
+def test_default_policy_section71_example():
+    """§7.1: first 1g.5gb -> block 6, second -> block 4 (so {4,6}, not {4,5})."""
+    g = GPU()
+    p = PROFILE_BY_NAME["1g.5gb"]
+    assert g.assign("a", p) == 6
+    assert g.assign("b", p) == 4
+
+
+def test_assign_respects_start_blocks():
+    """4g.20gb only ever starts at block 0 even when upper half is free."""
+    g = GPU()
+    g.assign_at("x", PROFILE_BY_NAME["3g.20gb"], 0)
+    assert g.assign("y", PROFILE_BY_NAME["4g.20gb"]) is None
+    g2 = GPU()
+    g2.assign_at("x", PROFILE_BY_NAME["3g.20gb"], 4)
+    assert g2.assign("y", PROFILE_BY_NAME["4g.20gb"]) == 0
+
+
+def test_release_restores_blocks():
+    g = GPU()
+    p = PROFILE_BY_NAME["3g.20gb"]
+    g.assign("a", p)
+    g.assign("b", p)
+    assert g.free == frozenset()
+    g.release("a")
+    g.release("b")
+    assert g.free == FULL_GPU
+    assert g.is_empty
+
+
+def test_half_full_and_single_profile():
+    g = GPU()
+    g.assign_at("a", PROFILE_BY_NAME["4g.20gb"], 0)
+    assert g.half_full() and g.single_profile()
+    g2 = GPU()
+    g2.assign_at("a", PROFILE_BY_NAME["3g.20gb"], 4)
+    assert g2.half_full() and g2.single_profile()
+    g2.assign_at("b", PROFILE_BY_NAME["1g.5gb"], 0)
+    assert not g2.half_full() and not g2.single_profile()
+
+
+def test_fragmentation_on_empty_and_full():
+    # Empty GPU: greedy 1g.5gb packing fills blocks 0-6, leaving block 7
+    # (not a legal 1g.5gb start) as residue -> fragVal = 1/1 = 1.0.
+    empty = GPU()
+    assert fragmentation(empty) == 1.0
+    # Fully occupied GPU has no free blocks -> no residue.
+    full = GPU()
+    full.assign_at("a", PROFILE_BY_NAME["7g.40gb"], 0)
+    assert fragmentation(full) == 0.0
+
+
+def test_fragmentation_detects_unusable_space():
+    """Isolated free block 7 is unusable by 2+-block profiles -> frag > 0."""
+    g = GPU()  # free = {3, 7}: block 7 never packs for 1g.10gb etc.
+    g.assign_at("a", PROFILE_BY_NAME["1g.10gb"], 0)
+    g.assign_at("b", PROFILE_BY_NAME["1g.5gb"], 2)
+    g.assign_at("c", PROFILE_BY_NAME["1g.10gb"], 4)
+    g.assign_at("d", PROFILE_BY_NAME["1g.5gb"], 6)
+    assert g.free == frozenset({3, 7})
+    frag_g = fragmentation(g)
+    assert frag_g > 0
+    # contiguous-and-alignable free pair {4,5} with same count of free blocks
+    g3 = GPU()
+    g3.assign_at("x", PROFILE_BY_NAME["4g.20gb"], 0)
+    g3.assign_at("y", PROFILE_BY_NAME["1g.10gb"], 6)
+    assert g3.free == frozenset({4, 5})
+    assert fragmentation(g3) < frag_g
+
+
+@given(st.integers(min_value=0, max_value=255))
+@settings(max_examples=256, deadline=None)
+def test_cc_free_mask_roundtrip(mask):
+    """CC computed from a mask-built GPU equals direct computation."""
+    g = gpu_from_free_mask(mask)
+    assert g.cc() == get_cc(g.free)
+    assert g.free_mask() == mask
+
+
+@given(st.lists(st.sampled_from([p.name for p in PROFILES]), max_size=8))
+@settings(max_examples=200, deadline=None)
+def test_assign_invariants(names):
+    """Property: placements never overlap, never exceed 8 blocks, CC sane."""
+    g = GPU()
+    for i, name in enumerate(names):
+        g.assign(i, PROFILE_BY_NAME[name])
+    used = set()
+    for owner, (p, s) in g.placements.items():
+        blocks = blocks_of(p, s)
+        assert s in p.start_blocks
+        assert not (blocks & used)
+        used |= blocks
+    assert used | set(g.free) == set(range(NUM_BLOCKS))
+    assert 0 <= g.cc() <= NUM_SLOTS

@@ -1,0 +1,109 @@
+"""Roofline tooling: HLO collective parser, term math, extrapolation,
+and the two cost-model facts the methodology depends on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import (_shape_bytes, collective_bytes,
+                                 roofline_terms, PEAK_FLOPS, HBM_BW,
+                                 ICI_BW)
+from repro.launch.roofline import depth_variants
+from repro.configs import get_config
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,1024]") == 16 * 1024 * 2
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("(f32[4], s32[2,2])") == 16 + 16
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("token[]") == 0  # unknown types ignored
+
+
+def test_collective_parser():
+    hlo = """
+  %all-gather.12 = f32[256,4096,2000] all-gather(%x), channel_id=70
+  %ar = (f32[16,4096,2048], f32[16,4096,2048]) all-reduce(%a, %b)
+  %cp = bf16[8,128] collective-permute(%y)
+  %dot.5 = f32[16,16] dot(%p, %q)
+  %rs = f32[2,4] reduce-scatter(%z)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 256 * 4096 * 2000 * 4
+    assert got["all-reduce"] == 2 * 16 * 4096 * 2048 * 4
+    assert got["collective-permute"] == 8 * 128 * 2
+    assert got["reduce-scatter"] == 2 * 4 * 4
+    assert "dot" not in got
+
+
+def test_roofline_terms_dominance():
+    chips = 256
+    t = roofline_terms(flops=1e18, hbm_bytes=1e12, coll_bytes=1e12,
+                       chips=chips)
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1e18 / (chips * PEAK_FLOPS))
+    t2 = roofline_terms(1e12, 1e12, 1e15, chips)
+    assert t2["dominant"] == "collective"
+    assert t2["collective_s"] == pytest.approx(1e15 / (chips * ICI_BW))
+    t3 = roofline_terms(1e12, 1e16, 1e12, chips)
+    assert t3["dominant"] == "memory"
+    assert t3["memory_s"] == pytest.approx(1e16 / (chips * HBM_BW))
+
+
+def test_cost_analysis_is_per_partition():
+    """The methodology's core fact: GSPMD cost_analysis reports
+    per-device numbers (we scale by chip count)."""
+    n = len(jax.devices())
+    x = jnp.zeros((128, 128), jnp.float32)
+    c = jax.jit(lambda a: a @ a).lower(x).compile()
+    flops = c.cost_analysis()["flops"]
+    # single device: exactly the global count
+    assert flops == pytest.approx(2 * 128 ** 3, rel=0.01)
+
+
+def test_cost_analysis_counts_scan_body_once():
+    """The second core fact: while-loop bodies are counted once -> the
+    depth-extrapolation in launch/roofline.py is required."""
+    w = jnp.zeros((10, 64, 64), jnp.float32)
+    x = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x, w):
+        y, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y
+    flops_scan = jax.jit(f).lower(x, w).compile().cost_analysis()["flops"]
+    flops_one = jax.jit(lambda a, b: a @ b[0]).lower(x, w).compile() \
+        .cost_analysis()["flops"]
+    assert flops_scan == pytest.approx(flops_one, rel=0.01)  # NOT 10x
+
+
+def test_depth_variants_linear_combiner():
+    cfg = get_config("tinyllama-1.1b")        # 22 layers
+    variants, combine = depth_variants(cfg)
+    assert [v.n_layers for v in variants] == [1, 2]
+    # f(d) = base + d*layer must be reconstructed exactly
+    base, layer = 7.0, 3.0
+    c = [np.array([base + 1 * layer]), np.array([base + 2 * layer])]
+    assert combine(c)[0] == pytest.approx(base + 22 * layer)
+
+
+def test_depth_variants_hybrid_decomposition():
+    cfg = get_config("zamba2-7b")             # 81 layers, period 6
+    variants, combine = depth_variants(cfg)
+    assert [v.n_layers for v in variants] == [6, 12, 7]
+    base, shared, mamba = 5.0, 11.0, 2.0
+    group = shared + 6 * mamba
+    c = [np.array([base + group]), np.array([base + 2 * group]),
+         np.array([base + group + mamba])]
+    # 81 = 13 groups + 3 remainder mamba layers
+    want = base + 13 * group + 3 * mamba
+    assert combine(c)[0] == pytest.approx(want)
+
+
+def test_depth_variants_encdec():
+    cfg = get_config("whisper-base")          # 6 + 6
+    variants, combine = depth_variants(cfg)
+    assert [(v.n_enc_layers, v.n_layers) for v in variants] == [(1, 1),
+                                                                (2, 2)]
+    base, pair = 4.0, 9.0
+    c = [np.array([base + pair]), np.array([base + 2 * pair])]
+    assert combine(c)[0] == pytest.approx(base + 6 * pair)

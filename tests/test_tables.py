@@ -1,0 +1,63 @@
+"""Precomputed tables must agree with the object-level MIG implementation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tables as T
+from repro.core.mig import (PROFILES, GPU, blocks_of, fragmentation, get_cc,
+                            gpu_from_free_mask)
+
+
+def test_cc_table_matches_object_level():
+    for mask in range(256):
+        assert T.CC_TABLE[mask] == get_cc(gpu_from_free_mask(mask).free)
+
+
+def test_counts_table():
+    for mask in range(0, 256, 7):
+        free = gpu_from_free_mask(mask).free
+        for pi, p in enumerate(PROFILES):
+            n = sum(1 for s in p.start_blocks if blocks_of(p, s) <= free)
+            assert T.COUNTS_TABLE[mask, pi] == n
+    # CC is the row sum of COUNTS (Eq. 1).
+    assert (T.COUNTS_TABLE.sum(axis=1) == T.CC_TABLE).all()
+
+
+def test_fits_consistency():
+    assert (T.FITS_TABLE == (T.COUNTS_TABLE > 0)).all()
+    assert (T.FITS_TABLE == (T.ASSIGN_START_TABLE >= 0)).all()
+
+
+@given(st.integers(0, 255), st.integers(0, 5))
+@settings(max_examples=300, deadline=None)
+def test_assign_tables_match_gpu_assign(mask, pi):
+    gpu = gpu_from_free_mask(mask)
+    start = gpu.assign("vm", PROFILES[pi])
+    if start is None:
+        assert T.ASSIGN_START_TABLE[mask, pi] == -1
+    else:
+        assert T.ASSIGN_START_TABLE[mask, pi] == start
+        assert T.ASSIGN_MASK_TABLE[mask, pi] == gpu.free_mask()
+        assert T.CC_AFTER_TABLE[mask, pi] == gpu.cc()
+
+
+def test_frag_table_matches_object_level():
+    for mask in range(256):
+        assert T.FRAG_TABLE[mask] == pytest.approx(
+            fragmentation(gpu_from_free_mask(mask)))
+
+
+def test_popcount():
+    for mask in range(256):
+        assert T.POPCOUNT_TABLE[mask] == bin(mask).count("1")
+
+
+def test_counts_after_table():
+    for mask in range(0, 256, 11):
+        for pi in range(6):
+            if T.FITS_TABLE[mask, pi]:
+                nm = T.ASSIGN_MASK_TABLE[mask, pi]
+                assert (T.COUNTS_AFTER_TABLE[mask, pi]
+                        == T.COUNTS_TABLE[nm]).all()
+            else:
+                assert (T.COUNTS_AFTER_TABLE[mask, pi] == 0).all()
