@@ -2,8 +2,8 @@
 
 The Python engine (``repro.sim.engine``) is the faithful sequential
 reference.  This module replays the same event stream as a single
-``lax.scan`` over (arrival | departure) events with the cluster state held
-in arrays, so that:
+``lax.scan`` over (departure | arrival | step-end) events with the cluster
+state held in arrays, so that:
 
   * one replay jit-compiles end to end (no Python in the loop),
   * ``jax.vmap`` over policy knobs (e.g. heavy-basket capacity) runs the
@@ -11,203 +11,530 @@ in arrays, so that:
   * on TPU the per-event scoring can use the Pallas kernels instead of the
     (CPU-friendly) 256-entry table gathers.
 
-Semantics matched to the Python engine (validated in
-tests/test_batched.py): within each 1 h bucket, departures are processed
-before arrivals; scans resolve ties by lowest globalIndex; GRMU here is
-the *Dual-Basket* configuration (defrag & consolidation off — the 'DB'
-point of Fig. 9), which is exactly the configuration whose acceptance the
-sweep benchmarks explore.
+Feature parity with the sequential engine (validated decision-for-decision
+in tests/test_equivalence.py):
+
+  * host CPU/RAM constraints, carried as per-host float32 headroom arrays
+    (the sequential ``Cluster`` accumulates in float32 in the same event
+    order, so feasibility comparisons are bit-identical);
+  * all five policies — FF/BF/MCC/MECC/GRMU — via the shared
+    ``repro.core.policy_core`` scoring/selection functions;
+  * MECC's windowed profile-frequency estimate, maintained *inside* the
+    scan with a two-pointer over the (static) arrival schedule;
+  * GRMU defragmentation and periodic consolidation as table-driven
+    in-scan operations at step-end events (ASSIGN_MASK/ASSIGN_START/FRAG
+    gathers — no object state);
+  * hourly acceptance / active-hardware series, sampled at step-end events
+    exactly where the sequential engine samples, so ``replay`` returns a
+    full ``SimResult``.
+
+Within each step (1 h bucket): departures are processed first, then
+arrivals, then the step-end hook (defrag -> consolidation -> metrics);
+scans resolve ties by lowest globalIndex.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import math
+from typing import Callable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..sim.cluster import VM, Cluster
-from . import tables as T
+from ..sim.metrics import SimResult
+from .mig import PROFILE_INDEX
+from . import policy_core as pc
 
-# Policies supported by the batched engine.
-FF, BF, MCC, GRMU_DB = 0, 1, 2, 3
+# Policy ids re-exported for callers of this module.  The old engine's
+# "GRMU-DB" policy id is gone: the DB point is GRMU with defrag=False,
+# consolidation_interval=None (``sweep_heavy_capacity``'s defaults).
+FF, BF, MCC, MECC, GRMU = pc.FF, pc.BF, pc.MCC, pc.MECC, pc.GRMU
 
-_FITS = jnp.asarray(T.FITS_TABLE)                  # (256, 6) bool
-_ASSIGN_MASK = jnp.asarray(T.ASSIGN_MASK_TABLE)    # (256, 6) uint8
-_ASSIGN_START = jnp.asarray(T.ASSIGN_START_TABLE)  # (256, 6) int8
-_CC_AFTER = jnp.asarray(T.CC_AFTER_TABLE)          # (256, 6) int16
-_POP = jnp.asarray(T.POPCOUNT_TABLE)               # (256,)
-_SIZES = jnp.asarray(T.PROFILE_SIZE.astype(np.int32))  # (6,)
+HEAVY_PROFILE = pc.HEAVY_PROFILE
 
-HEAVY_PROFILE = 5  # PROFILES index of 7g.40gb
+# Event kinds, in within-bucket processing order.
+DEPARTURE, ARRIVAL, STEP_END = 0, 1, 2
+
+_EPS = 1e-9
 
 
 @dataclasses.dataclass
 class EventTrace:
-    """Host-precomputed event stream: one row per (arrival|departure)."""
-    is_arrival: np.ndarray   # (E,) bool
-    vm_index: np.ndarray     # (E,) int32 (dense 0..N-1)
-    profile: np.ndarray      # (E,) int32
+    """Host-precomputed event stream + static cluster/VM metadata."""
+    # Per-event rows (E,), sorted by (bucket, kind, time, vm_id):
+    kind: np.ndarray         # int32: DEPARTURE | ARRIVAL | STEP_END
+    vm_index: np.ndarray     # int32 dense 0..N-1 (0 for step-end rows)
+    profile: np.ndarray      # int32 (0 for step-end rows)
+    time: np.ndarray         # float32 step start t of the row's bucket
+    idx: np.ndarray          # int32: arrival order (arrivals),
+    #                          step index (step ends), 0 otherwise
+    # Static per-VM arrays in dense (arrival, vm_id) order (N,):
+    vm_ids: np.ndarray       # int64 original vm_id per dense index
+    vm_profile: np.ndarray   # int32
+    vm_cpu: np.ndarray       # float32
+    vm_ram: np.ndarray       # float32
+    # MECC observation schedule over *included* arrivals (A,):
+    arr_times: np.ndarray    # float32 observation time (bucket start)
+    arr_profiles: np.ndarray  # int32
+    # Step sampling times (S,):
+    step_times: np.ndarray   # float64
+    # Cluster shape:
     num_vms: int
     num_gpus: int
+    num_hosts: int
+    gpu_host_id: np.ndarray  # (G,) int32
+    cpu_cap: np.ndarray      # (H,) float32
+    ram_cap: np.ndarray      # (H,) float32
+    step_hours: float = 1.0
 
 
-def build_events(vms: List[VM], num_gpus: int,
-                 step_hours: float = 1.0) -> EventTrace:
-    """Sort events the way the sequential engine does: by hour bucket,
-    departures first within a bucket, then chronological."""
-    rows = []
-    for dense_i, vm in enumerate(sorted(vms, key=lambda v: (v.arrival,
-                                                            v.vm_id))):
-        ab = int(vm.arrival // step_hours)
-        db = int(vm.departure // step_hours)
-        rows.append((ab, 1, vm.arrival, dense_i, _profile_idx(vm)))
-        rows.append((db, 0, vm.departure, dense_i, _profile_idx(vm)))
+def _arr_bucket(t: float, step: float) -> int:
+    # Bucket in which the sequential engine offers an arrival:
+    # smallest b with t < (b+1)*step - eps.
+    return int(math.floor((t + _EPS) / step))
+
+
+def _dep_bucket(t: float, step: float) -> int:
+    # Bucket at whose start the sequential engine pops a departure:
+    # smallest b with t <= (b+1)*step - eps.
+    return int(math.ceil((t + _EPS) / step)) - 1
+
+
+def build_events(vms: List[VM], cluster: Union[Cluster, int],
+                 step_hours: float = 1.0,
+                 horizon: Optional[float] = None) -> EventTrace:
+    """Lower a VM list + cluster onto the scan's event stream.
+
+    ``cluster`` may be a ``Cluster`` (host topology + CPU/RAM caps are
+    honored) or a bare GPU count (one unconstrained host per GPU — the
+    legacy GPU-only replay).  ``horizon`` defaults to the sequential
+    engine's (max arrival + step).
+
+    Bucket times reuse the sequential engine's accumulated step grid but
+    are carried as float32 in the scan; exact cross-engine decision
+    parity for MECC expiry / consolidation-due checks therefore holds
+    when step times are float32-representable (any integral
+    ``step_hours``, e.g. the default 1 h grid — asserted by
+    tests/test_equivalence.py)."""
+    if isinstance(cluster, Cluster):
+        num_gpus = cluster.num_gpus
+        num_hosts = len(cluster.hosts)
+        gpu_host_id = cluster.gpu_host_id.astype(np.int32)
+        cpu_cap = cluster.host_cpu_cap.copy()
+        ram_cap = cluster.host_ram_cap.copy()
+    else:
+        num_gpus = int(cluster)
+        num_hosts = num_gpus
+        gpu_host_id = np.arange(num_gpus, dtype=np.int32)
+        cpu_cap = np.full(num_hosts, np.inf, dtype=np.float32)
+        ram_cap = np.full(num_hosts, np.inf, dtype=np.float32)
+
+    order = sorted(vms, key=lambda v: (v.arrival, v.vm_id))
+    if horizon is None:
+        horizon = max((v.arrival for v in order), default=0.0) + step_hours
+    # Exactly the sequential engine's sampling loop.
+    step_times = []
+    t = 0.0
+    while t < horizon + _EPS:
+        step_times.append(t)
+        t += step_hours
+    S = len(step_times)
+
+    rows = []  # (bucket, kind, time, tiebreak, vm_index, profile, t, idx)
+    arr_times, arr_profiles = [], []
+    for dense_i, vm in enumerate(order):
+        p = PROFILE_INDEX[vm.profile.name]
+        ab = _arr_bucket(vm.arrival, step_hours)
+        if ab >= S:
+            continue  # past the horizon: never offered sequentially
+        a_ord = len(arr_times)
+        arr_times.append(step_times[ab])
+        arr_profiles.append(p)
+        rows.append((ab, ARRIVAL, vm.arrival, vm.vm_id, dense_i, p,
+                     step_times[ab], a_ord))
+        # A same-bucket departure is heap-popped one bucket later (the
+        # heap push happens after the bucket's departure phase).
+        db = max(_dep_bucket(vm.departure, step_hours), ab + 1)
+        if db < S:
+            rows.append((db, DEPARTURE, vm.departure, vm.vm_id, dense_i, p,
+                         step_times[db], 0))
+    for si, st in enumerate(step_times):
+        rows.append((si, STEP_END, np.inf, 0, 0, 0, st, si))
     rows.sort(key=lambda r: (r[0], r[1], r[2], r[3]))
+
     return EventTrace(
-        is_arrival=np.array([r[1] == 1 for r in rows], np.bool_),
-        vm_index=np.array([r[3] for r in rows], np.int32),
-        profile=np.array([r[4] for r in rows], np.int32),
-        num_vms=len(vms), num_gpus=num_gpus)
+        kind=np.array([r[1] for r in rows], np.int32),
+        vm_index=np.array([r[4] for r in rows], np.int32),
+        profile=np.array([r[5] for r in rows], np.int32),
+        time=np.array([r[6] for r in rows], np.float32),
+        idx=np.array([r[7] for r in rows], np.int32),
+        vm_ids=np.array([v.vm_id for v in order], np.int64),
+        vm_profile=np.array([PROFILE_INDEX[v.profile.name] for v in order],
+                            np.int32),
+        vm_cpu=np.array([v.cpu for v in order], np.float32),
+        vm_ram=np.array([v.ram for v in order], np.float32),
+        arr_times=np.asarray(arr_times, np.float32).reshape(-1),
+        arr_profiles=np.asarray(arr_profiles, np.int32).reshape(-1),
+        step_times=np.asarray(step_times, np.float64),
+        num_vms=len(order), num_gpus=num_gpus, num_hosts=num_hosts,
+        gpu_host_id=gpu_host_id, cpu_cap=cpu_cap, ram_cap=ram_cap,
+        step_hours=step_hours)
 
 
-def _profile_idx(vm: VM) -> int:
-    from .mig import PROFILE_INDEX
-    return PROFILE_INDEX[vm.profile.name]
+# ---------------------------------------------------------------------------
+# The scan
+# ---------------------------------------------------------------------------
+
+def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
+              consolidation_interval: Optional[float] = None,
+              defrag_trigger: str = "light",
+              mecc_window: float = 24.0) -> Callable:
+    """Build the (unjitted) replay function ``run(heavy_capacity) ->
+    dict of output arrays``.  ``policy`` and the GRMU/MECC knobs are
+    static; ``heavy_capacity`` may be traced (vmap it for Fig. 6 sweeps).
+    """
+    T = pc.tables_for(jnp)
+    G, N, H = events.num_gpus, max(events.num_vms, 1), events.num_hosts
+    S, A = len(events.step_times), max(len(events.arr_times), 1)
+    # Which state the static config actually needs (keeps the scan body —
+    # and therefore per-event CPU dispatch — minimal).
+    need_defrag = policy == GRMU and defrag
+    need_consolidation = (policy == GRMU
+                          and consolidation_interval is not None)
+
+    ev = dict(
+        kind=jnp.asarray(np.clip(events.kind, 0, 2)),
+        vm_index=jnp.asarray(events.vm_index),
+        profile=jnp.asarray(events.profile),
+        time=jnp.asarray(events.time),
+        idx=jnp.asarray(events.idx),
+    )
+    _vmp = jnp.asarray(events.vm_profile) if events.num_vms else \
+        jnp.zeros(1, jnp.int32)
+    # Per-VM (cpu, ram) rows and per-GPU (cpu, ram) capacity rows, so host
+    # feasibility is one gather + one fused compare.
+    _vmres = jnp.stack(
+        [jnp.asarray(events.vm_cpu), jnp.asarray(events.vm_ram)], axis=1) \
+        if events.num_vms else jnp.zeros((1, 2), jnp.float32)
+    _ghost = jnp.asarray(events.gpu_host_id)
+    _cap_g = jnp.stack([jnp.asarray(events.cpu_cap)[_ghost],
+                        jnp.asarray(events.ram_cap)[_ghost]], axis=1)
+    _ccap = jnp.asarray(events.cpu_cap)
+    _rcap = jnp.asarray(events.ram_cap)
+    _atimes = jnp.asarray(events.arr_times) if len(events.arr_times) else \
+        jnp.zeros(1, jnp.float32)
+    _aprofs = jnp.asarray(events.arr_profiles) if len(events.arr_times) \
+        else jnp.zeros(1, jnp.int32)
+
+    def run(heavy_capacity):
+        heavy_cap = jnp.asarray(heavy_capacity, jnp.int32)
+        light_cap = jnp.int32(G) - heavy_cap
+
+        state0 = dict(
+            free=jnp.full((G,), 255, jnp.int32),
+            # Per-VM row: [gpu, start, accepted].
+            vmrow=jnp.tile(jnp.asarray([-1, 0, 0], jnp.int32), (N, 1)),
+            # Per-profile row: [accepted, total].
+            counts=jnp.zeros((6, 2), jnp.int32),
+            # Per-host row: [cpu_used, ram_used].
+            host_used=jnp.zeros((H, 2), jnp.float32),
+            # Per-step row: [accepted_cum, total_cum, pms, gpus].
+            hourly=jnp.zeros((S, 4), jnp.int32),
+        )
+        if policy == GRMU:
+            state0["basket"] = jnp.where(
+                jnp.arange(G) == 0, pc.HEAVY_BASKET,
+                jnp.where(jnp.arange(G) == 1, pc.LIGHT_BASKET,
+                          pc.POOL)).astype(jnp.int32)
+            state0["intra"] = jnp.asarray(0, jnp.int32)
+            state0["inter"] = jnp.asarray(0, jnp.int32)
+        if need_defrag:
+            state0["rej"] = jnp.asarray(False)
+        if need_consolidation:
+            state0["vm_count"] = jnp.zeros((G,), jnp.int32)
+            state0["last_cons"] = jnp.asarray(0.0, jnp.float32)
+        if policy == MECC:
+            state0["mecc_counts"] = jnp.zeros((6,), jnp.int32)
+            state0["mecc_ptr"] = jnp.asarray(0, jnp.int32)
+
+        # -- arrival ---------------------------------------------------------
+        def arrival(state, e):
+            p, vi = e["profile"], e["vm_index"]
+            mecc_w = None
+            if policy == MECC:
+                # on_arrival_observed: count the arrival, then expire
+                # history older than (now - window) with a two-pointer
+                # over the static observation schedule.
+                counts = state["mecc_counts"].at[p].add(1)
+                cutoff = e["time"] - jnp.float32(mecc_window)
+
+                def cond(c):
+                    ptr, _ = c
+                    return (ptr < A) & (_atimes[jnp.minimum(ptr, A - 1)]
+                                        < cutoff)
+
+                def body(c):
+                    ptr, cnt = c
+                    return ptr + 1, cnt.at[_aprofs[ptr]].add(-1)
+
+                ptr, counts = jax.lax.while_loop(
+                    cond, body, (state["mecc_ptr"], counts))
+                state = dict(state, mecc_counts=counts, mecc_ptr=ptr)
+                mecc_w = pc.mecc_weights(jnp, counts)
+
+            need = _vmres[vi]                               # (2,) cpu, ram
+            host_ok = jnp.all(state["host_used"][_ghost] + need <= _cap_g,
+                              axis=1)
+            if policy == GRMU:
+                pick, grew, grow_idx = pc.grmu_select(
+                    jnp, T, state["free"], p, host_ok, state["basket"],
+                    heavy_cap, light_cap)
+                want = jnp.where(p == HEAVY_PROFILE, pc.HEAVY_BASKET,
+                                 pc.LIGHT_BASKET)
+                basket = jnp.where(
+                    grew, state["basket"].at[grow_idx].set(want),
+                    state["basket"])
+                state = dict(state, basket=basket)
+            else:
+                pick = pc.select_gpu(policy, jnp, T, state["free"], p,
+                                     host_ok, mecc_w)
+            ok = pick >= 0
+            okc = ok.astype(jnp.int32)
+            g = jnp.maximum(pick, 0)
+            mask = state["free"][g]
+            row = jnp.stack([jnp.where(ok, pick, -1),
+                             jnp.where(ok, T.assign_start[mask, p], 0),
+                             okc])
+            state = dict(
+                state,
+                free=state["free"].at[g].set(
+                    jnp.where(ok, T.assign_mask[mask, p], mask)),
+                vmrow=state["vmrow"].at[vi].set(row),
+                counts=state["counts"].at[p].add(jnp.stack([okc, 1])),
+                host_used=state["host_used"].at[_ghost[g]].add(
+                    jnp.where(ok, need, jnp.float32(0.0))),
+            )
+            if need_consolidation:
+                state = dict(state,
+                             vm_count=state["vm_count"].at[g].add(okc))
+            if need_defrag:
+                rej = (~ok & (p != HEAVY_PROFILE)
+                       if defrag_trigger == "light" else ~ok)
+                state = dict(state, rej=state["rej"] | rej)
+            return state
+
+        # -- departure --------------------------------------------------------
+        def departure(state, e):
+            p, vi = e["profile"], e["vm_index"]
+            r = state["vmrow"][vi]
+            gpu, start = r[0], r[1]
+            ok = gpu >= 0
+            okc = ok.astype(jnp.int32)
+            g = jnp.maximum(gpu, 0)
+            blocks = ((jnp.int32(1) << T.sizes[p]) - 1) << start
+            state = dict(
+                state,
+                free=state["free"].at[g].set(
+                    jnp.where(ok, state["free"][g] | blocks,
+                              state["free"][g])),
+                vmrow=state["vmrow"].at[vi, 0].set(-1),
+                host_used=state["host_used"].at[_ghost[g]].add(
+                    jnp.where(ok, -_vmres[vi], jnp.float32(0.0))),
+            )
+            if need_consolidation:
+                state = dict(state,
+                             vm_count=state["vm_count"].at[g].add(-okc))
+            return state
+
+        # -- GRMU step-end operations ----------------------------------------
+        def do_defrag(state):
+            light = state["basket"] == pc.LIGHT_BASKET
+            tgt = pc.defrag_target(jnp, T, state["free"], light)
+            do = tgt >= 0
+            g = jnp.maximum(tgt, 0)
+            on_g = state["vmrow"][:, 0] == g
+            vm_start = state["vmrow"][:, 1]
+            prof_blk, vi_blk = [], []
+            for b in range(8):
+                sel = on_g & (vm_start == b)
+                has = sel.any()
+                vi = jnp.argmax(sel)
+                prof_blk.append(jnp.where(has, _vmp[vi], -1))
+                vi_blk.append(jnp.where(has, vi, N))
+            prof_blk = jnp.stack(prof_blk)
+            vi_blk = jnp.stack(vi_blk)
+            starts, ok, final_mask, moved = pc.repack_gpu(jnp, T, prof_blk)
+            apply = do & ok & (moved > 0)
+            cur = vm_start[jnp.clip(vi_blk, 0, N - 1)]
+            vals = jnp.where(apply & (starts >= 0), starts, cur)
+            return dict(
+                state,
+                free=state["free"].at[g].set(
+                    jnp.where(apply, final_mask, state["free"][g])),
+                vmrow=state["vmrow"].at[vi_blk, 1].set(vals, mode="drop"),
+                intra=state["intra"] + jnp.where(apply, moved, 0),
+            )
+
+        def do_consolidate(state):
+            free, basket = state["free"], state["basket"]
+            vm_gpu = state["vmrow"][:, 0]
+            # Sole resident per GPU (valid only where vm_count == 1).
+            owner = jnp.full(G + 1, -1, jnp.int32).at[
+                jnp.where(vm_gpu >= 0, vm_gpu, G)
+            ].set(jnp.arange(N, dtype=jnp.int32))[:G]
+            owner_c = jnp.clip(owner, 0, N - 1)
+            sole_p = jnp.where(owner >= 0, _vmp[owner_c], -1)
+            sole_res = jnp.where((owner >= 0)[:, None], _vmres[owner_c],
+                                 jnp.float32(0.0))
+            cand = pc.consolidation_candidates(
+                jnp, free, basket == pc.LIGHT_BASKET, state["vm_count"],
+                sole_p)
+            tgt_of, cpu_used, ram_used = pc.consolidation_plan(
+                jnp, T, free, cand, sole_p, sole_res[:, 0], sole_res[:, 1],
+                _ghost, state["host_used"][:, 0], state["host_used"][:, 1],
+                _ccap, _rcap)
+            valid = tgt_of >= 0
+            tgt_c = jnp.clip(tgt_of, 0, G - 1)
+            p_src = jnp.clip(sole_p, 0, 5)
+            starts = T.assign_start[free[tgt_c], p_src]
+            # Scatter receive side: each target gets exactly one source.
+            recv_idx = jnp.where(valid, tgt_of, G)
+            recv_p = jnp.full(G + 1, -1, jnp.int32).at[recv_idx].set(
+                jnp.where(valid, sole_p, -1))[:G]
+            recv_pc = jnp.clip(recv_p, 0, 5)
+            new_free = jnp.where(valid, 255, free)
+            new_free = jnp.where(recv_p >= 0,
+                                 T.assign_mask[free, recv_pc], new_free)
+            vi = jnp.where(valid, owner, N)
+            vmrow = state["vmrow"].at[vi, 0].set(tgt_of, mode="drop")
+            vmrow = vmrow.at[vi, 1].set(starts, mode="drop")
+            return dict(
+                state,
+                free=new_free,
+                basket=jnp.where(valid, pc.POOL, basket),
+                vmrow=vmrow,
+                vm_count=jnp.where(valid, 0, state["vm_count"])
+                + (recv_p >= 0).astype(jnp.int32),
+                host_used=jnp.stack([cpu_used, ram_used], axis=1),
+                inter=state["inter"] + valid.sum().astype(jnp.int32),
+            )
+
+        # -- step end ----------------------------------------------------------
+        def step_end(state, e):
+            if need_defrag:
+                state = jax.lax.cond(state["rej"], do_defrag, lambda s: s,
+                                     state)
+                state = dict(state, rej=jnp.asarray(False))
+            if need_consolidation:
+                due = (e["time"] - state["last_cons"]
+                       >= jnp.float32(consolidation_interval))
+                state = jax.lax.cond(due, do_consolidate, lambda s: s,
+                                     state)
+                state = dict(state, last_cons=jnp.where(
+                    due, e["time"], state["last_cons"]))
+            gpu_active = (state["free"] != 255).astype(jnp.int32)
+            pms = (jax.ops.segment_sum(gpu_active, _ghost,
+                                       num_segments=H) > 0)
+            sample = jnp.stack([state["counts"][:, 0].sum(),
+                                state["counts"][:, 1].sum(),
+                                pms.sum().astype(jnp.int32),
+                                gpu_active.sum()])
+            return dict(state,
+                        hourly=state["hourly"].at[e["idx"]].set(sample))
+
+        def step(state, e):
+            state = jax.lax.switch(
+                e["kind"],
+                [departure, arrival, step_end],
+                state, e)
+            return state, None
+
+        final, _ = jax.lax.scan(step, state0, ev)
+        zero = jnp.asarray(0, jnp.int32)
+        return dict(
+            accepted=final["counts"][:, 0], total=final["counts"][:, 1],
+            vm_accepted=final["vmrow"][:, 2] > 0,
+            h_acc=final["hourly"][:, 0], h_tot=final["hourly"][:, 1],
+            h_pms=final["hourly"][:, 2], h_gpus=final["hourly"][:, 3],
+            intra=final.get("intra", zero), inter=final.get("inter", zero),
+        )
+
+    return run
 
 
-def _first_true(mask: jnp.ndarray) -> jnp.ndarray:
-    """Index of first True, or -1."""
-    idx = jnp.argmax(mask)
-    return jnp.where(mask.any(), idx, -1)
+def default_heavy_capacity(events: EventTrace,
+                           frac: float = 0.30) -> int:
+    # Same rounding as the sequential GRMU constructor (no floor), so a
+    # replay and a GRMU(cluster, frac) run the identical cap.
+    return int(round(frac * events.num_gpus))
+
+
+def make_replay(events: EventTrace, policy: int, **cfg) -> Callable:
+    """Jit-compiled ``run(heavy_capacity) -> dict of output arrays``."""
+    return jax.jit(_make_run(events, policy, **cfg))
 
 
 def replay(events: EventTrace, policy: int,
-           heavy_capacity: Optional[jnp.ndarray] = None
-           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Replay the trace under ``policy``.
-
-    Returns (accepted_per_profile (6,), active_gpu_integral ()).
-    ``heavy_capacity`` (scalar int32) is only used by GRMU_DB and may be a
-    traced value — vmap over it for the Fig. 6 sweep.
-    """
-    G, N = events.num_gpus, events.num_vms
+           heavy_capacity=None, **cfg) -> SimResult:
+    """Replay the trace under ``policy`` and return a full ``SimResult``
+    (same fields the sequential engine fills).  ``heavy_capacity`` is only
+    used by GRMU; GRMU knobs (``defrag``, ``consolidation_interval``,
+    ``defrag_trigger``) and MECC's ``mecc_window`` pass through ``cfg``."""
     if heavy_capacity is None:
-        heavy_capacity = jnp.int32(max(1, round(0.3 * G)))
-    light_capacity = jnp.int32(G) - heavy_capacity
-
-    ev = dict(
-        is_arrival=jnp.asarray(events.is_arrival),
-        vm_index=jnp.asarray(events.vm_index),
-        profile=jnp.asarray(events.profile),
-    )
-
-    # GRMU basket state: 0 = pool, 1 = heavy, 2 = light.
-    basket0 = jnp.zeros(G, jnp.int32)
-    if policy == GRMU_DB:
-        basket0 = basket0.at[0].set(1).at[1].set(2)
-
-    state0 = dict(
-        free=jnp.full((G,), 255, jnp.int32),
-        vm_gpu=jnp.full((N,), -1, jnp.int32),
-        vm_start=jnp.zeros((N,), jnp.int32),
-        accepted=jnp.zeros((6,), jnp.int32),
-        total=jnp.zeros((6,), jnp.int32),
-        basket=basket0,
-        active_integral=jnp.zeros((), jnp.float64)
-        if jax.config.read("jax_enable_x64") else jnp.zeros((), jnp.float32),
-    )
-
-    def arrival(state, vm_i, p):
-        free = state["free"]
-        fits = _FITS[free, p]
-        if policy == FF:
-            score_pick = _first_true(fits)
-        elif policy == BF:
-            left = jnp.where(fits, _POP[free] - _SIZES[p], 99)
-            pick = jnp.argmin(left)
-            score_pick = jnp.where(fits.any(), pick, -1)
-        elif policy == MCC:
-            cc = jnp.where(fits, _CC_AFTER[free, p], -1)
-            pick = jnp.argmax(cc)
-            score_pick = jnp.where(fits.any(), pick, -1)
-        else:  # GRMU_DB
-            heavy = p == HEAVY_PROFILE
-            want = jnp.where(heavy, 1, 2)
-            cap = jnp.where(heavy, heavy_capacity, light_capacity)
-            in_basket = state["basket"] == want
-            bfits = fits & in_basket
-            pick = _first_true(bfits)
-            # grow basket from pool (lowest index) if allowed
-            pool_free = state["basket"] == 0
-            grow_ok = ((pick < 0)
-                       & (jnp.sum(in_basket) <= cap)
-                       & pool_free.any())
-            grow_idx = _first_true(pool_free)
-            new_basket = jnp.where(
-                grow_ok,
-                state["basket"].at[grow_idx].set(want),
-                state["basket"])
-            state = dict(state, basket=new_basket)
-            # after growing, the new GPU is empty => profile fits
-            score_pick = jnp.where(pick >= 0, pick,
-                                   jnp.where(grow_ok, grow_idx, -1))
-        gpu = score_pick
-        ok = gpu >= 0
-        gg = jnp.maximum(gpu, 0)
-        mask = free[gg]
-        new_free = free.at[gg].set(
-            jnp.where(ok, _ASSIGN_MASK[mask, p].astype(jnp.int32), mask))
-        start = _ASSIGN_START[mask, p].astype(jnp.int32)
-        state = dict(
-            state,
-            free=new_free,
-            vm_gpu=state["vm_gpu"].at[vm_i].set(jnp.where(ok, gpu, -1)),
-            vm_start=state["vm_start"].at[vm_i].set(
-                jnp.where(ok, start, 0)),
-            accepted=state["accepted"].at[p].add(
-                jnp.where(ok, 1, 0).astype(jnp.int32)),
-            total=state["total"].at[p].add(1),
-        )
-        return state
-
-    def departure(state, vm_i, p):
-        gpu = state["vm_gpu"][vm_i]
-        ok = gpu >= 0
-        gg = jnp.maximum(gpu, 0)
-        size = _SIZES[p]
-        blocks = ((jnp.int32(1) << size) - 1) << state["vm_start"][vm_i]
-        new_free = state["free"].at[gg].set(
-            jnp.where(ok, state["free"][gg] | blocks, state["free"][gg]))
-        return dict(state, free=new_free,
-                    vm_gpu=state["vm_gpu"].at[vm_i].set(-1))
-
-    def step(state, e):
-        is_arr, vm_i, p = e["is_arrival"], e["vm_index"], e["profile"]
-        st_a = arrival(state, vm_i, p)
-        st_d = departure(state, vm_i, p)
-        new_state = jax.tree.map(
-            lambda a, d: jnp.where(is_arr, a, d), st_a, st_d)
-        active = jnp.sum(new_state["free"] != 255)
-        new_state = dict(new_state,
-                         active_integral=state["active_integral"]
-                         + active.astype(state["active_integral"].dtype))
-        return new_state, None
-
-    final, _ = jax.lax.scan(step, state0, ev)
-    return final["accepted"], final["active_integral"]
+        heavy_capacity = default_heavy_capacity(events)
+    out = jax.device_get(make_replay(events, policy, **cfg)(heavy_capacity))
+    return result_from_arrays(events, policy, out)
 
 
-def sweep_heavy_capacity(events: EventTrace,
-                         fracs: np.ndarray) -> np.ndarray:
-    """Fig. 6 on-device: vmap the GRMU_DB replay over basket capacities.
+def result_from_arrays(events: EventTrace, policy: int, out: dict
+                       ) -> SimResult:
+    """Assemble a SimResult from ``run``'s output arrays (host side, in
+    float64, exactly how the sequential engine derives its series)."""
+    from .mig import PROFILES
+    accepted = np.asarray(out["accepted"], np.int64)
+    total = np.asarray(out["total"], np.int64)
+    res = SimResult(policy=pc.POLICY_NAMES.get(policy, str(policy)))
+    res.total_requests = int(total.sum())
+    res.accepted = int(accepted.sum())
+    res.rejected = res.total_requests - res.accepted
+    for i, p in enumerate(PROFILES):
+        res.per_profile_total[p.name] = int(total[i])
+        res.per_profile_accepted[p.name] = int(accepted[i])
+    res.hourly_times = [float(t) for t in events.step_times]
+    h_acc = np.asarray(out["h_acc"], np.int64)
+    h_tot = np.asarray(out["h_tot"], np.int64)
+    res.hourly_acceptance = [int(a) / max(1, int(t))
+                             for a, t in zip(h_acc, h_tot)]
+    denom = events.num_hosts + events.num_gpus
+    res.hourly_active_hw = [(int(p) + int(g)) / denom
+                            for p, g in zip(out["h_pms"], out["h_gpus"])]
+    res.intra_migrations = int(out["intra"])
+    res.inter_migrations = int(out["inter"])
+    res.migrations = res.intra_migrations + res.inter_migrations
+    acc_mask = np.asarray(out["vm_accepted"], bool)[:len(events.vm_ids)]
+    res.accepted_ids = [int(v) for v in events.vm_ids[acc_mask]]
+    return res
+
+
+def sweep_heavy_capacity(events: EventTrace, fracs: np.ndarray,
+                         **cfg) -> np.ndarray:
+    """Fig. 6 on-device: vmap the GRMU replay over basket capacities.
+    Defaults to the 'DB' configuration (defrag & consolidation off — the
+    point whose acceptance the paper's sweep explores); pass
+    ``defrag=True`` / ``consolidation_interval=...`` for full GRMU.
     Returns (len(fracs), 6) accepted-per-profile."""
-    caps = jnp.asarray(np.maximum(
-        1, np.round(fracs * events.num_gpus)).astype(np.int32))
-    fn = jax.jit(jax.vmap(lambda c: replay(events, GRMU_DB, c)[0]))
+    cfg.setdefault("defrag", False)
+    cfg.setdefault("consolidation_interval", None)
+    caps = jnp.asarray(np.round(
+        np.asarray(fracs) * events.num_gpus).astype(np.int32))
+    run = _make_run(events, GRMU, **cfg)
+    fn = jax.jit(jax.vmap(lambda c: run(c)["accepted"]))
     return np.asarray(fn(caps))
 
 
-__all__ = ["EventTrace", "build_events", "replay", "sweep_heavy_capacity",
-           "FF", "BF", "MCC", "GRMU_DB"]
+__all__ = ["EventTrace", "build_events", "make_replay", "replay",
+           "result_from_arrays", "sweep_heavy_capacity",
+           "default_heavy_capacity",
+           "FF", "BF", "MCC", "MECC", "GRMU"]

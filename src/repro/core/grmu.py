@@ -6,13 +6,19 @@ Multi-stage placement:
     *light basket* serves everything else.  Each basket starts with one GPU.
   * Allocation (Alg. 3): first-fit over the chosen basket (globalIndex
     order) with the default CC-maximizing block placement; on failure, grow
-    the basket from the pool if the cap allows.
+    the basket from the pool while strictly below the basket's cap.
   * Defragmentation (Alg. 4): when any VM was rejected in a step, re-pack
-    the most fragmented light-basket GPU on a mock GPU with the default
-    policy and intra-GPU-migrate only the VMs whose blocks changed.
+    the most fragmented light-basket GPU via the default policy and
+    intra-GPU-migrate only the VMs whose blocks changed.
   * Consolidation (Alg. 5): every ``consolidation_interval`` hours, merge
     pairs of half-full single-profile (3g/4g.20gb) light GPUs; emptied GPUs
     return to the pool.
+
+This class is the sequential *driver*: all decision logic (basket
+selection/growth, defrag target + repack, consolidation candidate pairing)
+lives in ``repro.core.policy_core`` and is shared verbatim with the
+batched JAX engine; here we only apply the decisions to the object-level
+``Cluster``.
 """
 from __future__ import annotations
 
@@ -21,9 +27,11 @@ from typing import List, Optional
 import numpy as np
 
 from ..sim.cluster import Cluster, VM
-from .mig import GPU, PROFILE_BY_NAME, fragmentation
+from .mig import PROFILE_INDEX
+from . import policy_core as pc
 from .policies import PlacementPolicy
-from .tables import FITS_TABLE, FRAG_TABLE
+
+_T = pc.tables_for(np)
 
 
 class SortedGpuList:
@@ -87,71 +95,68 @@ class GRMU(PlacementPolicy):
         if g is not None:
             self.light.add(g)
 
+    # -- basket views ---------------------------------------------------------
+    def _basket_array(self) -> np.ndarray:
+        """Per-GPU basket label for the shared policy core.  GPUs tracked
+        by none of the three lists get -1 (never selectable/growable)."""
+        arr = np.full(self.cluster.num_gpus, -1, dtype=np.int32)
+        arr[list(self.pool)] = pc.POOL
+        arr[list(self.heavy)] = pc.HEAVY_BASKET
+        arr[list(self.light)] = pc.LIGHT_BASKET
+        return arr
+
+    def _light_mask(self) -> np.ndarray:
+        mask = np.zeros(self.cluster.num_gpus, dtype=bool)
+        mask[list(self.light)] = True
+        return mask
+
     # -- Alg. 3: allocation -------------------------------------------------
     def place(self, vm: VM) -> bool:
         heavy = vm.profile.name == "7g.40gb"
         basket = self.heavy if heavy else self.light
-        capacity = self.heavy_capacity if heavy else self.light_capacity
-        pi = self._profile_idx(vm)
-        # First-fit scan of the basket in globalIndex order (vectorized).
-        ids = np.fromiter(basket, dtype=np.int64, count=len(basket))
-        if ids.size:
-            fits = FITS_TABLE[self.cluster.free_masks[ids], pi]
-            if fits.any():
-                host_ok = self.cluster.host_fits_vec(vm)[ids]
-                fits = fits & host_ok
-                if fits.any():
-                    return self._place_on(vm, ids[np.argmax(fits)])
-        # Grow the basket from the pool if the cap allows (Alg. 3 line 13).
-        if len(basket) <= capacity:
-            gid = self.pool.get()
-            if gid is not None:
-                basket.add(gid)
-                if self._place_on(vm, gid):
-                    return True
-                # host-level resources blocked it: GPU stays in basket empty
-        return False
+        pick, grew, _ = pc.grmu_select(
+            np, _T, self.cluster.free_masks, self._profile_idx(vm),
+            self.cluster.host_fits_vec(vm), self._basket_array(),
+            self.heavy_capacity, self.light_capacity)
+        if grew:
+            # The grown GPU is the lowest-index pool member == pool.get();
+            # it joins the basket even when host resources then block the
+            # placement (the GPU stays in the basket, empty).
+            basket.add(self.pool.get())
+        if pick < 0:
+            return False
+        return self._place_on(vm, int(pick))
 
     # -- Alg. 4: defragmentation (intra-GPU migration) ------------------------
     def defragment(self) -> int:
         """Re-pack the most fragmented light GPU; returns #migrations."""
-        ids = np.fromiter(self.light, dtype=np.int64, count=len(self.light))
-        if not ids.size:
-            return 0
-        frags = FRAG_TABLE[self.cluster.free_masks[ids]]
-        # Max(lightBasket, Fragmentation) — first maximizer in index order.
-        gid = int(ids[np.argmax(frags)])
-        if frags.max() <= 0.0:
+        gid = int(pc.defrag_target(np, _T, self.cluster.free_masks,
+                                   self._light_mask()))
+        if gid < 0:
             return 0
         gpu = self.cluster.gpu_index[gid][1]
-        if gpu.is_empty:
-            return 0
-        # Mock GPU: replay this GPU's VMs through the default policy.
-        mock = GPU()
-        # Replay in current block order (the order they'd be read off the
-        # device); placements dict preserves insertion (arrival) order.
-        items = sorted(gpu.placements.items(), key=lambda kv: kv[1][1])
-        relocated = {}
-        for vm_id, (profile, start) in items:
-            new_start = mock.assign(vm_id, profile)
-            if new_start is None:
-                # Sequential re-pack painted itself into a corner; the
-                # paper assumes replay always succeeds — abort safely.
-                return 0
-            if new_start != start:
-                relocated[vm_id] = new_start
-        if not relocated:
+        # Residents keyed by current start block (starts are unique per
+        # GPU); ascending block order == the sequential replay order.
+        prof_by_block = np.full(8, -1, dtype=np.int32)
+        vm_by_block = {}
+        for vm_id, (profile, start) in gpu.placements.items():
+            prof_by_block[start] = PROFILE_INDEX[profile.name]
+            vm_by_block[start] = vm_id
+        starts, ok, _, moved = pc.repack_gpu(np, _T, prof_by_block)
+        if not ok or int(moved) == 0:
+            # Re-pack painted itself into a corner (the paper assumes the
+            # replay always succeeds — abort safely), or nothing moved.
             return 0
         # IntraMigrate: apply via release-all/re-place to avoid transient
         # overlaps (device-level this is a staged copy through spare blocks).
-        placed = [(vm_id, prof, mock.placements[vm_id][1])
-                  for vm_id, (prof, start) in items]
-        for vm_id, _, _ in placed:
+        items = [(vm_by_block[b], gpu.placements[vm_by_block[b]][0],
+                  int(starts[b])) for b in range(8) if prof_by_block[b] >= 0]
+        for vm_id, _, _ in items:
             gpu.release(vm_id)
-        for vm_id, prof, new_start in placed:
+        for vm_id, prof, new_start in items:
             gpu.assign_at(vm_id, prof, new_start)
         self.cluster._sync(gpu)
-        n = len(relocated)
+        n = int(moved)
         self.intra_migrations += n
         self.migrations += n
         return n
@@ -159,31 +164,39 @@ class GRMU(PlacementPolicy):
     # -- Alg. 5: light-basket consolidation (inter-GPU migration) -------------
     def consolidate(self) -> int:
         """Merge half-full single-profile light GPUs; returns #migrations."""
-        candidates = []
-        for gid in list(self.light):
-            gpu = self.cluster.gpu_index[gid][1]
-            if gpu.half_full() and gpu.single_profile():
-                prof = next(iter(gpu.placements.values()))[0]
-                if prof.name in ("3g.20gb", "4g.20gb"):
-                    candidates.append(gid)
+        cl = self.cluster
+        G = cl.num_gpus
+        vm_count = np.zeros(G, dtype=np.int32)
+        sole_p = np.full(G, -1, dtype=np.int32)
+        sole_vm = np.full(G, -1, dtype=np.int64)
+        sole_cpu = np.zeros(G, dtype=np.float32)
+        sole_ram = np.zeros(G, dtype=np.float32)
+        for gid in self.light:
+            gpu = cl.gpu_index[gid][1]
+            vm_count[gid] = len(gpu.placements)
+            if len(gpu.placements) == 1:
+                vm_id, (prof, _) = next(iter(gpu.placements.items()))
+                sole_p[gid] = PROFILE_INDEX[prof.name]
+                sole_vm[gid] = vm_id
+                vm = cl.vms[vm_id]
+                sole_cpu[gid] = np.float32(vm.cpu)
+                sole_ram[gid] = np.float32(vm.ram)
+        cand = pc.consolidation_candidates(np, cl.free_masks,
+                                           self._light_mask(), vm_count,
+                                           sole_p)
+        tgt_of, _, _ = pc.consolidation_plan(
+            np, _T, cl.free_masks, cand, sole_p, sole_cpu, sole_ram,
+            cl.gpu_host_id, cl.host_cpu_used, cl.host_ram_used,
+            cl.host_cpu_cap, cl.host_ram_cap)
         moved = 0
-        while len(candidates) >= 2:
-            src_id = candidates.pop(0)
-            src = self.cluster.gpu_index[src_id][1]
-            vm_id = next(iter(src.placements.keys()))
-            migrated = False
-            for tgt_id in candidates:
-                tgt = self.cluster.gpu_index[tgt_id][1]
-                if self.cluster.migrate_inter(vm_id, tgt):
-                    candidates.remove(tgt_id)  # target now full
-                    # Freed source returns to the pool (Alg. 5 lines 6-7).
-                    self.light.remove(src_id)
-                    self.pool.add(src_id)
-                    moved += 1
-                    migrated = True
-                    break
-            if not migrated:
-                continue
+        for src in np.flatnonzero(tgt_of >= 0):
+            src = int(src)
+            if cl.migrate_inter(int(sole_vm[src]),
+                                cl.gpu_index[int(tgt_of[src])][1]):
+                # Freed source returns to the pool (Alg. 5 lines 6-7).
+                self.light.remove(src)
+                self.pool.add(src)
+                moved += 1
         self.inter_migrations += moved
         self.migrations += moved
         return moved

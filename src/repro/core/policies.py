@@ -4,27 +4,33 @@ Every policy operates at the upper placement level (host/GPU traversal);
 the block-level placement inside a chosen GPU is always NVIDIA's default
 CC-maximizing policy (Algorithm 1), which cannot be overridden.
 
-Scans are vectorized over the cluster's per-GPU free-mask vector using the
-precomputed tables of ``repro.core.tables`` — semantically identical to the
-paper's sequential scans (first-fit / first-maximizer order is preserved by
-``argmax`` returning the first extremum), but O(1) Python work per GPU.
+The classes here are thin *drivers*: scan feasibility, scoring and pick
+semantics live in ``repro.core.policy_core`` (shared verbatim with the
+batched JAX engine); this module only adapts them to the object-level
+``Cluster`` and keeps MECC's arrival history.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
 from ..sim.cluster import Cluster, VM
+from . import policy_core as pc
 from .mig import PROFILES, PROFILE_INDEX
-from .tables import (CC_AFTER_TABLE, COUNTS_AFTER_TABLE, FITS_TABLE,
-                     POPCOUNT_TABLE)
+
+_T = pc.tables_for(np)
 
 
 class PlacementPolicy:
-    """Interface used by the simulation engine."""
+    """Interface used by the simulation engine.
+
+    Subclasses either set ``POLICY_ID`` (a ``policy_core`` baseline id) or
+    override ``place`` entirely (GRMU does).
+    """
     name = "base"
+    POLICY_ID: Optional[int] = None
 
     def __init__(self, cluster: Cluster):
         self.cluster = cluster
@@ -36,20 +42,24 @@ class PlacementPolicy:
     def _profile_idx(self, vm: VM) -> int:
         return PROFILE_INDEX[vm.profile.name]
 
-    def _fits_vec(self, vm: VM) -> np.ndarray:
-        """Per-GPU boolean: profile fits AND host has CPU/RAM headroom."""
-        fits = FITS_TABLE[self.cluster.free_masks, self._profile_idx(vm)]
-        if fits.any():
-            fits = fits & self.cluster.host_fits_vec(vm)
-        return fits
-
     def _place_on(self, vm: VM, gpu_idx: int) -> bool:
         gpu = self.cluster.gpu_index[int(gpu_idx)][1]
         return self.cluster.place(vm, gpu) is not None
 
+    def _mecc_weights(self) -> Optional[np.ndarray]:
+        return None
+
     # -- interface -----------------------------------------------------------
     def place(self, vm: VM) -> bool:
-        raise NotImplementedError
+        if self.POLICY_ID is None:
+            raise NotImplementedError
+        pick = pc.select_gpu(self.POLICY_ID, np, _T, self.cluster.free_masks,
+                             self._profile_idx(vm),
+                             self.cluster.host_fits_vec(vm),
+                             self._mecc_weights())
+        if pick < 0:
+            return False
+        return self._place_on(vm, int(pick))
 
     def on_arrival_observed(self, vm: VM, now: float) -> None:
         """Called for every arrival (accepted or not) — MECC history."""
@@ -64,46 +74,28 @@ class PlacementPolicy:
 class FirstFit(PlacementPolicy):
     """FF: scan hosts/GPUs in index order, place on the first fit."""
     name = "FF"
-
-    def place(self, vm: VM) -> bool:
-        fits = self._fits_vec(vm)
-        if not fits.any():
-            return False
-        return self._place_on(vm, np.argmax(fits))
+    POLICY_ID = pc.FF
 
 
 class BestFit(PlacementPolicy):
     """BF: place on the fitting GPU that minimizes leftover free blocks."""
     name = "BF"
-
-    def place(self, vm: VM) -> bool:
-        fits = self._fits_vec(vm)
-        if not fits.any():
-            return False
-        left = POPCOUNT_TABLE[self.cluster.free_masks] - vm.profile.size
-        left = np.where(fits, left, 99)
-        return self._place_on(vm, np.argmin(left))
+    POLICY_ID = pc.BF
 
 
 class MaxCC(PlacementPolicy):
     """MCC (Algorithm 6): tentative-assign on every GPU, keep the placement
     with the highest post-assignment CC (first maximizer in index order)."""
     name = "MCC"
-
-    def place(self, vm: VM) -> bool:
-        fits = self._fits_vec(vm)
-        if not fits.any():
-            return False
-        cc = CC_AFTER_TABLE[self.cluster.free_masks, self._profile_idx(vm)]
-        cc = np.where(fits, cc, -1)
-        return self._place_on(vm, np.argmax(cc))
+    POLICY_ID = pc.MCC
 
 
 class MaxECC(PlacementPolicy):
     """MECC (Algorithm 7): like MCC but each profile's slot count is
-    weighted by its empirical arrival probability over a look-back window
+    weighted by its empirical arrival frequency over a look-back window
     (n = 24 h gave the lowest prediction error in the paper)."""
     name = "MECC"
+    POLICY_ID = pc.MECC
 
     def __init__(self, cluster: Cluster, window_hours: float = 24.0):
         super().__init__(cluster)
@@ -120,23 +112,8 @@ class MaxECC(PlacementPolicy):
             _, old = self.history.popleft()
             self._counts[old] -= 1
 
-    def _profile_probs(self) -> np.ndarray:
-        total = self._counts.sum()
-        if total == 0:
-            return np.full(len(PROFILES), 1.0 / len(PROFILES))
-        return self._counts / total
-
-    def place(self, vm: VM) -> bool:
-        fits = self._fits_vec(vm)
-        if not fits.any():
-            return False
-        probs = self._profile_probs()
-        # ECC = sum_p P(p) * |S(G_after, p)|, G_after from default Assign.
-        counts_after = COUNTS_AFTER_TABLE[self.cluster.free_masks,
-                                          self._profile_idx(vm)]
-        ecc = counts_after @ probs
-        ecc = np.where(fits, ecc, -1.0)
-        return self._place_on(vm, np.argmax(ecc))
+    def _mecc_weights(self) -> np.ndarray:
+        return pc.mecc_weights(np, self._counts)
 
 
 POLICY_REGISTRY = {

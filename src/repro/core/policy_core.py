@@ -1,0 +1,290 @@
+"""Backend-agnostic policy core — every placement policy's semantics, once.
+
+This module is the single source of truth for the *decision logic* of the
+paper's policies (FF/BF/MCC/MECC, Algs. 6-7; GRMU, Algs. 2-5).  Every
+function is pure, branch-free over traced values, and parameterized over an
+array namespace ``xp`` (``numpy`` or ``jax.numpy``), so the same code path
+drives both engines:
+
+  * ``repro.core.policies`` / ``repro.core.grmu`` — the object-level
+    sequential reference (``xp = numpy``, eager, one VM at a time);
+  * ``repro.core.batched`` — the ``lax.scan`` replay engine
+    (``xp = jax.numpy``, jit/vmap-able, whole trace on device).
+
+Scoring is integer-only (MECC uses the raw windowed counts as weights
+rather than normalized probabilities — argmax-equivalent since the
+normalizer is a positive constant) so both backends tie-break bit-for-bit
+identically: ``argmax`` returns the first extremum in globalIndex order in
+NumPy and JAX alike, preserving the paper's first-fit / first-maximizer
+scan order.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import tables as _np_tables
+
+# Policy identifiers (shared by both engines).
+FF, BF, MCC, MECC, GRMU = 0, 1, 2, 3, 4
+POLICY_IDS = {"FF": FF, "BF": BF, "MCC": MCC, "MECC": MECC, "GRMU": GRMU}
+POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+
+# PROFILES index of 7g.40gb — the heavy-basket class.
+HEAVY_PROFILE = 5
+
+# GRMU basket labels (Alg. 2): a GPU is in exactly one.
+POOL, HEAVY_BASKET, LIGHT_BASKET = 0, 1, 2
+
+# Free-mask values of a half-full GPU (Alg. 5 consolidation candidates).
+LOWER_HALF_FREE = 0x0F   # blocks 0-3 free (upper half occupied)
+UPPER_HALF_FREE = 0xF0   # blocks 4-7 free (lower half occupied)
+
+# Profile indices eligible for consolidation (3g.20gb, 4g.20gb).
+CONSOLIDATABLE = (3, 4)
+
+
+class Tables:
+    """The §5 mask-indexed tables materialized in one array namespace.
+
+    Integer tables are widened to int32 so NumPy and JAX index/compare with
+    the same value ranges (JAX would otherwise default differently).
+    """
+
+    def __init__(self, xp):
+        self.xp = xp
+        self.fits = xp.asarray(_np_tables.FITS_TABLE)                # (256,6) bool
+        self.pop = xp.asarray(_np_tables.POPCOUNT_TABLE.astype(np.int32))
+        self.sizes = xp.asarray(_np_tables.PROFILE_SIZE.astype(np.int32))
+        self.cc_after = xp.asarray(_np_tables.CC_AFTER_TABLE.astype(np.int32))
+        self.counts_after = xp.asarray(
+            _np_tables.COUNTS_AFTER_TABLE.astype(np.int32))       # (256,6,6)
+        self.assign_mask = xp.asarray(
+            _np_tables.ASSIGN_MASK_TABLE.astype(np.int32))
+        self.assign_start = xp.asarray(
+            _np_tables.ASSIGN_START_TABLE.astype(np.int32))
+        self.frag = xp.asarray(_np_tables.FRAG_TABLE)                # float32
+
+
+_TABLES_CACHE: dict = {}
+
+
+def tables_for(xp) -> Tables:
+    key = xp.__name__
+    if key not in _TABLES_CACHE:
+        _TABLES_CACHE[key] = Tables(xp)
+    return _TABLES_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# Generic helpers (work for numpy eagerly and jax.numpy traced)
+# ---------------------------------------------------------------------------
+
+def first_true(xp, mask):
+    """Index of the first True element, or -1 (lowest globalIndex wins)."""
+    idx = xp.argmax(mask)
+    return xp.where(xp.any(mask), idx, -1)
+
+
+def _set_at(xp, arr, idx, val):
+    """Functional single-index update for either backend."""
+    if xp is np:
+        out = arr.copy()
+        out[idx] = val
+        return out
+    return arr.at[idx].set(val)
+
+
+def _fori(xp, n, body, init):
+    """fori_loop with one body definition for both backends."""
+    if xp is np:
+        carry = init
+        for i in range(n):
+            carry = body(i, carry)
+        return carry
+    import jax
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+# ---------------------------------------------------------------------------
+# FF / BF / MCC / MECC (Algs. 6-7)
+# ---------------------------------------------------------------------------
+
+def mecc_weights(xp, counts):
+    """MECC profile weights from windowed arrival counts.
+
+    The paper weights by empirical probabilities P(p) = count_p / total;
+    because the normalizer is a shared positive constant, weighting by raw
+    integer counts selects the same argmax — and keeps the scoring exactly
+    comparable across float widths.  Empty history degrades to uniform.
+    """
+    counts = xp.asarray(counts)
+    return xp.where(counts.sum() > 0, counts, xp.ones_like(counts))
+
+
+def placement_scores(policy, xp, T, free, profile, fits, mecc_w=None):
+    """Per-GPU integer score under ``policy``; infeasible GPUs score below
+    every feasible one.  The chosen GPU is the first maximizer."""
+    if policy == FF:
+        return fits.astype(xp.int32)
+    if policy == BF:
+        # Minimize leftover free blocks == maximize (size - popcount).
+        return xp.where(fits, T.sizes[profile] - T.pop[free], -99)
+    if policy == MCC:
+        return xp.where(fits, T.cc_after[free, profile], -1)
+    if policy == MECC:
+        ecc = T.counts_after[free, profile] @ mecc_w.astype(T.counts_after.dtype)
+        return xp.where(fits, ecc, -1)
+    raise ValueError(f"unknown baseline policy id {policy}")
+
+
+def select_gpu(policy, xp, T, free, profile, host_ok, mecc_w=None):
+    """Feasibility-mask + score + first-maximizer pick.  Returns the GPU
+    globalIndex, or -1 when no GPU is feasible (profile or host level)."""
+    fits = T.fits[free, profile] & host_ok
+    scores = placement_scores(policy, xp, T, free, profile, fits, mecc_w)
+    return xp.where(xp.any(fits), xp.argmax(scores), -1)
+
+
+# ---------------------------------------------------------------------------
+# GRMU allocation (Algs. 2-3)
+# ---------------------------------------------------------------------------
+
+def grmu_select(xp, T, free, profile, host_ok, basket, heavy_cap, light_cap):
+    """Dual-basket first-fit with capacity-capped growth (Alg. 3).
+
+    ``basket`` holds POOL/HEAVY_BASKET/LIGHT_BASKET per GPU (any other
+    value = unmanaged, never selectable).  Growth is allowed while the
+    basket holds strictly fewer GPUs than its cap; the grown GPU is the
+    lowest-index pool member.  A grown GPU joins the basket even when the
+    host-level CPU/RAM check then blocks the placement (the paper's Alg. 3
+    fetches first, places second) — in that case pick is -1 but ``grew``
+    is still True.
+
+    Returns ``(pick, grew, grow_idx)``.
+    """
+    is_heavy = xp.asarray(profile == HEAVY_PROFILE)
+    want = xp.where(is_heavy, HEAVY_BASKET, LIGHT_BASKET)
+    cap = xp.where(is_heavy, heavy_cap, light_cap)
+    in_basket = basket == want
+    fits = T.fits[free, profile] & host_ok & in_basket
+    pick = first_true(xp, fits)
+    pool_free = basket == POOL
+    grew = (pick < 0) & (in_basket.sum() < cap) & xp.any(pool_free)
+    grow_idx = xp.argmax(pool_free)
+    grown_pick = xp.where(grew & host_ok[grow_idx], grow_idx, -1)
+    return xp.where(pick >= 0, pick, grown_pick), grew, grow_idx
+
+
+# ---------------------------------------------------------------------------
+# GRMU defragmentation (Alg. 4)
+# ---------------------------------------------------------------------------
+
+def defrag_target(xp, T, free, light_mask):
+    """Most fragmented light-basket GPU (first maximizer), or -1 when no
+    light GPU has positive fragmentation or the maximizer is empty (the
+    paper's sequential code aborts outright in that case)."""
+    scores = xp.where(light_mask, T.frag[free], -1.0)
+    g = xp.argmax(scores)
+    ok = (scores[g] > 0.0) & (free[g] != 255)
+    return xp.where(ok, g, -1)
+
+
+def repack_gpu(xp, T, profiles_by_block):
+    """Replay a GPU's residents through the default policy on a mock GPU.
+
+    ``profiles_by_block`` is an (8,) int array: the profile index of the VM
+    whose instance *starts* at block b, or -1.  Iterating blocks in
+    ascending order replays VMs in current-placement order, exactly like
+    the sequential Alg. 4 replay.
+
+    Returns ``(new_starts (8,), ok, final_mask, moved)``: the re-packed
+    start per original start block (-1 where no VM), whether every VM
+    re-fit (the paper assumes yes; callers must abort the defrag when
+    False), the mock GPU's final free mask, and how many VMs changed
+    blocks (the intra-migration count).
+    """
+    mock = xp.asarray(255)
+    ok = xp.asarray(True)
+    moved = xp.asarray(0)
+    new_starts = []
+    for b in range(8):
+        p = profiles_by_block[b]
+        has = p >= 0
+        pp = xp.maximum(p, 0)
+        fit = T.fits[mock, pp] & has
+        ok = ok & (fit | ~has)
+        ns = xp.where(fit, T.assign_start[mock, pp], -1)
+        new_starts.append(ns)
+        moved = moved + xp.where(fit & (ns != b), 1, 0)
+        mock = xp.where(fit, T.assign_mask[mock, pp], mock)
+    return xp.stack(new_starts), ok, mock, moved
+
+
+# ---------------------------------------------------------------------------
+# GRMU consolidation (Alg. 5)
+# ---------------------------------------------------------------------------
+
+def consolidation_candidates(xp, free, light_mask, vm_count, sole_profile):
+    """Half-full, single-VM light GPUs holding a 3g/4g.20gb instance."""
+    half = (free == LOWER_HALF_FREE) | (free == UPPER_HALF_FREE)
+    prof_ok = ((sole_profile == CONSOLIDATABLE[0])
+               | (sole_profile == CONSOLIDATABLE[1]))
+    return light_mask & half & (vm_count == 1) & prof_ok
+
+
+def consolidation_plan(xp, T, free, cand, sole_profile, sole_cpu, sole_ram,
+                       gpu_host, cpu_used, ram_used, cpu_cap, ram_cap):
+    """Greedy pairing of consolidation candidates (Alg. 5's while loop).
+
+    Scans sources in globalIndex order; each source merges onto the first
+    later still-available candidate that fits its profile (4g.20gb only
+    fits a free lower half) and whose host has CPU/RAM headroom.  Paired
+    GPUs leave the candidate set; a source with no feasible target is
+    dropped (it cannot become a target afterwards, matching the paper's
+    destructive pop).  Host headroom is updated pair by pair in scan order
+    so both engines evolve resource state identically.
+
+    Returns ``(tgt_of, cpu_used, ram_used)`` where ``tgt_of[g]`` is the
+    target GPU for source ``g`` or -1.
+    """
+    G = free.shape[0]
+    gids = xp.arange(G)
+
+    def body(g, carry):
+        avail, tgt_of, cpu_u, ram_u = carry
+        p = xp.maximum(sole_profile[g], 0)
+        c, r, h = sole_cpu[g], sole_ram[g], gpu_host[g]
+        host_ok = ((gpu_host == h)
+                   | ((cpu_u[gpu_host] + c <= cpu_cap[gpu_host])
+                      & (ram_u[gpu_host] + r <= ram_cap[gpu_host])))
+        feasible = avail & (gids > g) & T.fits[free, p] & host_ok
+        tgt = first_true(xp, feasible)
+        do = avail[g] & (tgt >= 0)
+        tgt_c = xp.maximum(tgt, 0)
+        th = gpu_host[tgt_c]
+        move = do & (th != h)
+        delta_c = xp.where(move, c, xp.asarray(0.0, dtype=cpu_u.dtype))
+        delta_r = xp.where(move, r, xp.asarray(0.0, dtype=ram_u.dtype))
+        cpu_u = _set_at(xp, cpu_u, h, cpu_u[h] - delta_c)
+        cpu_u = _set_at(xp, cpu_u, th, cpu_u[th] + delta_c)
+        ram_u = _set_at(xp, ram_u, h, ram_u[h] - delta_r)
+        ram_u = _set_at(xp, ram_u, th, ram_u[th] + delta_r)
+        avail = avail & (gids != g) & ~(do & (gids == tgt_c))
+        tgt_of = _set_at(xp, tgt_of, g, xp.where(do, tgt, -1))
+        return avail, tgt_of, cpu_u, ram_u
+
+    init = (cand, xp.full(G, -1, dtype=xp.int32),
+            xp.asarray(cpu_used), xp.asarray(ram_used))
+    _, tgt_of, cpu_out, ram_out = _fori(xp, G, body, init)
+    return tgt_of, cpu_out, ram_out
+
+
+__all__ = [
+    "FF", "BF", "MCC", "MECC", "GRMU", "POLICY_IDS", "POLICY_NAMES",
+    "HEAVY_PROFILE", "POOL", "HEAVY_BASKET", "LIGHT_BASKET",
+    "LOWER_HALF_FREE", "UPPER_HALF_FREE", "CONSOLIDATABLE",
+    "Tables", "tables_for", "first_true", "mecc_weights",
+    "placement_scores", "select_gpu", "grmu_select",
+    "defrag_target", "repack_gpu",
+    "consolidation_candidates", "consolidation_plan",
+]

@@ -42,10 +42,6 @@ class Host:
     ram_used: float = 0.0
     weight: float = 1.0     # b_j in Eq. (4)
 
-    def fits_host(self, vm: VM) -> bool:
-        return (self.cpu_used + vm.cpu <= self.cpu_capacity
-                and self.ram_used + vm.ram <= self.ram_capacity)
-
     @property
     def is_active(self) -> bool:
         """phi_j: powered on iff any GPU hosts a VM."""
@@ -62,6 +58,9 @@ class Cluster:
 
     def __init__(self, hosts: List[Host]):
         self.hosts = hosts
+        for pos, h in enumerate(hosts):
+            if h.host_id != pos:
+                raise ValueError("host_id must equal position in hosts list")
         # GPU.global_index -> (host, gpu); also provides the orderly
         # first-fit traversal used by every policy and by GRMU's pool.
         self.gpu_index: Dict[int, Tuple[Host, GPU]] = {}
@@ -80,13 +79,50 @@ class Cluster:
         self.gpu_host_id = np.array(
             [self.gpu_index[i][0].host_id for i in range(len(self.gpu_index))],
             dtype=np.int32)
+        # Maintained per-host CPU/RAM accounting (the hot path of every
+        # sequential ``place`` call).  float32 on purpose: the batched JAX
+        # engine accumulates in float32, and using the same width + the
+        # same event order here makes feasibility comparisons bit-identical
+        # across engines.
+        self.host_cpu_cap = np.array([h.cpu_capacity for h in hosts],
+                                     dtype=np.float32)
+        self.host_ram_cap = np.array([h.ram_capacity for h in hosts],
+                                     dtype=np.float32)
+        self.host_cpu_used = np.array([h.cpu_used for h in hosts],
+                                      dtype=np.float32)
+        self.host_ram_used = np.array([h.ram_used for h in hosts],
+                                      dtype=np.float32)
 
     def _sync(self, gpu: GPU) -> None:
         self.free_masks[gpu.global_index] = gpu.free_mask()
 
+    def _host_fits(self, host: Host, vm: VM) -> bool:
+        """Array-backed host headroom check (same math as host_fits_vec)."""
+        i = host.host_id
+        return bool(
+            (self.host_cpu_used[i] + np.float32(vm.cpu)
+             <= self.host_cpu_cap[i])
+            and (self.host_ram_used[i] + np.float32(vm.ram)
+                 <= self.host_ram_cap[i]))
+
+    def _host_charge(self, host: Host, vm: VM, sign: int) -> None:
+        i = host.host_id
+        if sign > 0:
+            self.host_cpu_used[i] += np.float32(vm.cpu)
+            self.host_ram_used[i] += np.float32(vm.ram)
+        else:
+            self.host_cpu_used[i] -= np.float32(vm.cpu)
+            self.host_ram_used[i] -= np.float32(vm.ram)
+        # Keep the object-level mirror exactly equal to the arrays, so
+        # Host.fits_host answers match the engines' decisions.
+        host.cpu_used = float(self.host_cpu_used[i])
+        host.ram_used = float(self.host_ram_used[i])
+
     def host_fits_vec(self, vm: VM) -> np.ndarray:
         """Boolean per-GPU vector: does the owning host fit ``vm``?"""
-        ok = np.array([h.fits_host(vm) for h in self.hosts], dtype=bool)
+        ok = ((self.host_cpu_used + np.float32(vm.cpu) <= self.host_cpu_cap)
+              & (self.host_ram_used + np.float32(vm.ram)
+                 <= self.host_ram_cap))
         return ok[self.gpu_host_id]
 
     # -- queries ----------------------------------------------------------
@@ -116,13 +152,12 @@ class Cluster:
         """Try to place ``vm`` on ``gpu`` with the default block policy.
         Returns the start block, or None (GPU full / host resources)."""
         host = self.host_of_gpu(gpu)
-        if not host.fits_host(vm):
+        if not self._host_fits(host, vm):
             return None
         start = gpu.assign(vm.vm_id, vm.profile)
         if start is None:
             return None
-        host.cpu_used += vm.cpu
-        host.ram_used += vm.ram
+        self._host_charge(host, vm, +1)
         self.placements[vm.vm_id] = (host, gpu)
         self.vms[vm.vm_id] = vm
         self._sync(gpu)
@@ -131,8 +166,7 @@ class Cluster:
     def place_at(self, vm: VM, gpu: GPU, start: int) -> None:
         host = self.host_of_gpu(gpu)
         gpu.assign_at(vm.vm_id, vm.profile, start)
-        host.cpu_used += vm.cpu
-        host.ram_used += vm.ram
+        self._host_charge(host, vm, +1)
         self.placements[vm.vm_id] = (host, gpu)
         self.vms[vm.vm_id] = vm
         self._sync(gpu)
@@ -141,8 +175,7 @@ class Cluster:
         host, gpu = self.placements.pop(vm_id)
         vm = self.vms.pop(vm_id)
         gpu.release(vm_id)
-        host.cpu_used -= vm.cpu
-        host.ram_used -= vm.ram
+        self._host_charge(host, vm, -1)
         self._sync(gpu)
 
     def migrate_intra(self, vm_id: int, new_start: int) -> None:
@@ -158,17 +191,15 @@ class Cluster:
         vm = self.vms[vm_id]
         src_host, src_gpu = self.placements[vm_id]
         dst_host = self.host_of_gpu(dst)
-        if dst_host is not src_host and not dst_host.fits_host(vm):
+        if dst_host is not src_host and not self._host_fits(dst_host, vm):
             return False
         start = dst.assign(vm_id, vm.profile)
         if start is None:
             return False
         src_gpu.release(vm_id)
         if dst_host is not src_host:
-            src_host.cpu_used -= vm.cpu
-            src_host.ram_used -= vm.ram
-            dst_host.cpu_used += vm.cpu
-            dst_host.ram_used += vm.ram
+            self._host_charge(src_host, vm, -1)
+            self._host_charge(dst_host, vm, +1)
         self.placements[vm_id] = (dst_host, dst)
         self._sync(src_gpu)
         self._sync(dst)

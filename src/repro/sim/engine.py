@@ -45,6 +45,7 @@ def simulate(cluster: Cluster, policy: PlacementPolicy, vms: List[VM],
             if policy.place(vm):
                 res.accepted += 1
                 res.per_profile_accepted[vm.profile.name] += 1
+                res.accepted_ids.append(vm.vm_id)
                 heapq.heappush(departures, (vm.departure, vm.vm_id))
             else:
                 res.rejected += 1

@@ -25,6 +25,9 @@ class SimResult:
     migrations: int = 0
     intra_migrations: int = 0
     inter_migrations: int = 0
+    # Per-VM decisions: vm_ids accepted, in arrival order (both engines
+    # fill this; the cross-engine equivalence tests compare it).
+    accepted_ids: List[int] = dataclasses.field(default_factory=list)
 
     # -- derived ------------------------------------------------------------
     @property

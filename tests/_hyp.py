@@ -1,0 +1,33 @@
+"""Optional-hypothesis shim: property tests run when hypothesis is
+installed and are individually skipped (not collection errors) when not.
+
+Usage in test modules::
+
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    def _skip_decorator(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = _skip_decorator
+    settings = _skip_decorator
+
+    class _Strategies:
+        """Stub: strategy constructors are only evaluated inside @given
+        argument lists, which the skip decorator never runs."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core import batched as B
 from repro.core.grmu import GRMU
-from repro.core.policies import BestFit, FirstFit, MaxCC
+from repro.core.policies import BestFit, FirstFit, MaxCC, MaxECC
 from repro.sim.engine import simulate
 from repro.workload.alibaba import TraceConfig, generate
 
@@ -17,14 +17,16 @@ def _python_accepts(PolicyCls, cfg, **kw):
 
 
 @pytest.mark.parametrize("policy_name,policy_id", [
-    ("FF", B.FF), ("BF", B.BF), ("MCC", B.MCC)])
+    ("FF", B.FF), ("BF", B.BF), ("MCC", B.MCC), ("MECC", B.MECC)])
 def test_batched_matches_python_engine(policy_name, policy_id):
     cfg = TraceConfig(scale=0.03, seed=7)
-    cls = {"FF": FirstFit, "BF": BestFit, "MCC": MaxCC}[policy_name]
+    cls = {"FF": FirstFit, "BF": BestFit, "MCC": MaxCC,
+           "MECC": MaxECC}[policy_name]
     res, cluster, vms = _python_accepts(cls, cfg)
-    events = B.build_events(vms, cluster.num_gpus)
-    accepted, _ = B.replay(events, policy_id)
-    assert int(np.asarray(accepted).sum()) == res.accepted
+    events = B.build_events(vms, cluster)
+    bres = B.replay(events, policy_id)
+    assert bres.accepted == res.accepted
+    assert bres.accepted_ids == res.accepted_ids
 
 
 def test_batched_grmu_db_matches_python_db():
@@ -34,16 +36,35 @@ def test_batched_grmu_db_matches_python_db():
     pol = GRMU(cluster, heavy_capacity_frac=0.3, defrag=False,
                consolidation_interval=None)
     res = simulate(cluster, pol, vms)
-    events = B.build_events(vms, cluster.num_gpus)
+    events = B.build_events(vms, cluster)
     cap = int(max(1, round(0.3 * cluster.num_gpus)))
-    accepted, _ = B.replay(events, B.GRMU_DB, np.int32(cap))
-    assert int(np.asarray(accepted).sum()) == res.accepted
+    bres = B.replay(events, B.GRMU, cap, defrag=False,
+                    consolidation_interval=None)
+    assert bres.accepted == res.accepted
+    assert bres.accepted_ids == res.accepted_ids
+
+
+def test_batched_emits_full_simresult():
+    """The batched engine fills the same SimResult fields as the
+    sequential engine: per-profile tallies and hourly series."""
+    cfg = TraceConfig(scale=0.03, seed=2)
+    cluster, vms = generate(cfg)
+    res = simulate(cluster, FirstFit(cluster), vms)
+    cluster2, vms2 = generate(cfg)
+    events = B.build_events(vms2, cluster2)
+    bres = B.replay(events, B.FF)
+    assert bres.per_profile_accepted == res.per_profile_accepted
+    assert bres.per_profile_total == res.per_profile_total
+    assert bres.hourly_times == res.hourly_times
+    assert bres.hourly_acceptance == res.hourly_acceptance
+    assert bres.hourly_active_hw == res.hourly_active_hw
+    assert bres.active_hw_auc == pytest.approx(res.active_hw_auc)
 
 
 def test_sweep_heavy_capacity_shapes_and_monotone_7g():
     cfg = TraceConfig(scale=0.03, seed=5)
     cluster, vms = generate(cfg)
-    events = B.build_events(vms, cluster.num_gpus)
+    events = B.build_events(vms, cluster)
     fracs = np.array([0.2, 0.3, 0.5])
     out = B.sweep_heavy_capacity(events, fracs)
     assert out.shape == (3, 6)
@@ -58,6 +79,24 @@ def test_event_ordering_departure_before_arrival_same_hour():
            VM(1, PROFILE_BY_NAME["7g.40gb"], arrival=1.9, duration=1.0)]
     # VM0 departs at 1.1 (bucket 1), VM1 arrives at 1.9 (bucket 1):
     # departure processed first => VM1 accepted on the single GPU.
-    ev = B.build_events(vms, num_gpus=1)
-    accepted, _ = B.replay(ev, B.FF)
-    assert int(np.asarray(accepted).sum()) == 2
+    ev = B.build_events(vms, 1)
+    bres = B.replay(ev, B.FF)
+    assert bres.accepted == 2
+
+
+def test_same_bucket_departure_deferred_like_heap():
+    """A VM arriving and departing inside one bucket frees its GPU only at
+    the NEXT bucket's departure phase (the sequential heap is pushed after
+    the bucket's departure pass)."""
+    from repro.core.mig import PROFILE_BY_NAME
+    from repro.sim.cluster import VM, make_cluster
+    vms = [VM(0, PROFILE_BY_NAME["7g.40gb"], arrival=0.1, duration=0.5),
+           VM(1, PROFILE_BY_NAME["7g.40gb"], arrival=0.8, duration=1.0)]
+    cluster = make_cluster([1])
+    res = simulate(cluster, FirstFit(cluster), vms)
+    ev = B.build_events(vms, 1)
+    bres = B.replay(ev, B.FF)
+    # VM0 departs at 0.6 but within bucket 0 -> VM1 (arrives 0.8) must be
+    # rejected by BOTH engines.
+    assert res.accepted == bres.accepted == 1
+    assert res.accepted_ids == bres.accepted_ids == [0]

@@ -1,7 +1,7 @@
 """Engine + workload tests (departures, metrics, Eqs. 27-30, IQR filter)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.mig import PROFILES, PROFILE_BY_NAME
 from repro.core.policies import FirstFit

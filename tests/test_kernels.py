@@ -7,7 +7,7 @@ repro.core.tables, closing the loop kernel -> oracle -> object model.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import tables as T
 from repro.core.mig import PROFILES

@@ -1,6 +1,6 @@
 """Tests for the MIG model (paper §3, §5, Table 1, Fig. 1-3, Table 3)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.mig import (FULL_GPU, NUM_BLOCKS, NUM_SLOTS, PROFILES,
                             PROFILE_BY_NAME, GPU, available_starts,

@@ -111,13 +111,16 @@ def test_grmu_dual_basket_routing():
 
 
 def test_grmu_heavy_basket_cap():
-    """7g.40gb VMs beyond the heavy cap are rejected even with idle pool."""
+    """7g.40gb VMs beyond the heavy cap are rejected even with idle pool.
+
+    Regression for the historical off-by-one: growth is allowed only while
+    the basket holds strictly fewer GPUs than its cap (Alg. 3), so a cap
+    of 2 means the heavy basket never exceeds 2 GPUs."""
     cluster = make_cluster([1] * 10)
     pol = GRMU(cluster, heavy_capacity_frac=0.2)  # cap = 2 GPUs
     accepted = sum(pol.place(mkvm(i, "7g.40gb")) for i in range(5))
-    # cap=2 -> basket may grow to cap+1 per Alg. 3's <= check
-    assert accepted == 3
-    assert len(pol.heavy) == 3
+    assert accepted == 2
+    assert len(pol.heavy) == 2
     # Light profiles still get GPUs from the pool.
     assert pol.place(mkvm(50, "1g.5gb"))
 

@@ -1,0 +1,154 @@
+"""The backend-agnostic policy core: numpy and jax.numpy agree, and the
+table-driven repack matches the object-level default policy."""
+import numpy as np
+import pytest
+
+from repro.core import policy_core as pc
+from repro.core.mig import GPU, PROFILES, gpu_from_free_mask
+
+jnp = pytest.importorskip("jax.numpy")
+
+_TN = pc.tables_for(np)
+_TJ = pc.tables_for(jnp)
+
+
+def _random_state(rng, n_gpus=12):
+    free = rng.integers(0, 256, size=n_gpus).astype(np.uint8)
+    host_ok = rng.random(n_gpus) < 0.8
+    return free, host_ok
+
+
+@pytest.mark.parametrize("policy", [pc.FF, pc.BF, pc.MCC, pc.MECC])
+def test_select_gpu_backends_agree(policy):
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        free, host_ok = _random_state(rng)
+        p = int(rng.integers(0, 6))
+        w = rng.integers(0, 40, size=6) if policy == pc.MECC else None
+        got_np = int(pc.select_gpu(policy, np, _TN, free, p, host_ok, w))
+        got_j = int(pc.select_gpu(
+            policy, jnp, _TJ, jnp.asarray(free.astype(np.int32)), p,
+            jnp.asarray(host_ok),
+            jnp.asarray(w.astype(np.int32)) if w is not None else None))
+        assert got_np == got_j
+
+
+def test_grmu_select_backends_agree():
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        free, host_ok = _random_state(rng)
+        basket = rng.integers(0, 3, size=free.size).astype(np.int32)
+        p = int(rng.integers(0, 6))
+        r_np = pc.grmu_select(np, _TN, free, p, host_ok, basket, 3, 5)
+        r_j = pc.grmu_select(jnp, _TJ, jnp.asarray(free.astype(np.int32)),
+                             p, jnp.asarray(host_ok),
+                             jnp.asarray(basket), 3, 5)
+        assert tuple(int(x) for x in r_np) == tuple(int(x) for x in r_j)
+
+
+def test_grmu_select_caps_are_strict():
+    """Growth requires strictly fewer members than the cap (Alg. 3)."""
+    free = np.full(4, 0, dtype=np.uint8)       # all full
+    host_ok = np.ones(4, dtype=bool)
+    basket = np.array([2, 2, 0, 0], np.int32)  # light at cap 2
+    pick, grew, _ = pc.grmu_select(np, _TN, free, 0, host_ok, basket,
+                                   heavy_cap=2, light_cap=2)
+    assert int(pick) == -1 and not bool(grew)
+    pick, grew, gidx = pc.grmu_select(np, _TN, free, 0, host_ok, basket,
+                                      heavy_cap=2, light_cap=3)
+    assert bool(grew) and int(gidx) == 2 and int(pick) == 2
+
+
+def test_repack_matches_object_level_default_policy():
+    """repack_gpu == replaying residents through GPU.assign in block
+    order, for random reachable occupancy patterns."""
+    rng = np.random.default_rng(2)
+    for _ in range(100):
+        # Build a random occupied GPU via the default policy itself.
+        gpu = GPU()
+        for vm in range(rng.integers(1, 6)):
+            p = PROFILES[int(rng.integers(0, 6))]
+            gpu.assign(("vm", vm), p)
+        prof_by_block = np.full(8, -1, np.int32)
+        for owner, (prof, start) in gpu.placements.items():
+            prof_by_block[start] = PROFILES.index(prof)
+        starts, ok, final_mask, moved = pc.repack_gpu(np, _TN,
+                                                      prof_by_block)
+        # Object-level replay on a mock GPU, ascending current start.
+        mock = GPU()
+        expect_ok, n_moved = True, 0
+        for b in range(8):
+            if prof_by_block[b] < 0:
+                continue
+            ns = mock.assign(("m", b), PROFILES[int(prof_by_block[b])])
+            if ns is None:
+                expect_ok = False
+                break
+            assert int(starts[b]) == ns
+            n_moved += int(ns != b)
+        assert bool(ok) == expect_ok
+        if expect_ok:
+            assert int(moved) == n_moved
+            assert int(final_mask) == mock.free_mask()
+
+
+def test_defrag_target_skips_empty_and_nonpositive():
+    free = np.array([255, 255, 255], np.uint8)   # all empty
+    light = np.array([True, True, False])
+    assert int(pc.defrag_target(np, _TN, free, light)) == -1
+    # No light GPUs at all.
+    assert int(pc.defrag_target(np, _TN, free, np.zeros(3, bool))) == -1
+
+
+def test_consolidation_plan_pairs_in_index_order():
+    # Four candidate GPUs, single host, all feasible: (0,1) and (2,3).
+    G = 4
+    free = np.full(G, pc.UPPER_HALF_FREE, np.uint8)  # lower half busy
+    cand = np.ones(G, bool)
+    sole_p = np.full(G, 3, np.int32)                 # 3g.20gb fits start 4
+    zeros = np.zeros(G, np.float32)
+    tgt, _, _ = pc.consolidation_plan(
+        np, _TN, free, cand, sole_p, zeros, zeros,
+        np.zeros(G, np.int32), np.zeros(1, np.float32),
+        np.zeros(1, np.float32), np.full(1, 100, np.float32),
+        np.full(1, 100, np.float32))
+    assert tgt.tolist() == [1, -1, 3, -1]
+
+
+def test_consolidation_plan_respects_profile_feasibility():
+    # 4g.20gb (start 0 only) cannot move onto a busy lower half.
+    G = 2
+    free = np.full(G, pc.UPPER_HALF_FREE, np.uint8)
+    cand = np.ones(G, bool)
+    sole_p = np.full(G, 4, np.int32)
+    zeros = np.zeros(G, np.float32)
+    tgt, _, _ = pc.consolidation_plan(
+        np, _TN, free, cand, sole_p, zeros, zeros,
+        np.zeros(G, np.int32), np.zeros(1, np.float32),
+        np.zeros(1, np.float32), np.full(1, 100, np.float32),
+        np.full(1, 100, np.float32))
+    assert tgt.tolist() == [-1, -1]
+
+
+def test_consolidation_plan_respects_host_headroom():
+    # Cross-host move blocked by CPU; same-host move always allowed.
+    G = 2
+    free = np.full(G, pc.UPPER_HALF_FREE, np.uint8)
+    cand = np.ones(G, bool)
+    sole_p = np.full(G, 3, np.int32)
+    cpu = np.full(G, 4.0, np.float32)
+    zeros = np.zeros(G, np.float32)
+    hosts = np.array([0, 1], np.int32)
+    cpu_used = np.array([4.0, 7.0], np.float32)
+    cpu_cap = np.array([8.0, 8.0], np.float32)
+    big = np.full(2, 100.0, np.float32)
+    tgt, cpu_out, _ = pc.consolidation_plan(
+        np, _TN, free, cand, sole_p, cpu, zeros, hosts,
+        cpu_used, np.zeros(2, np.float32), cpu_cap, big)
+    assert tgt.tolist() == [-1, -1]          # 7 + 4 > 8 on host 1
+    cpu_used = np.array([4.0, 3.0], np.float32)
+    tgt, cpu_out, _ = pc.consolidation_plan(
+        np, _TN, free, cand, sole_p, cpu, zeros, hosts,
+        cpu_used, np.zeros(2, np.float32), cpu_cap, big)
+    assert tgt.tolist() == [1, -1]
+    assert cpu_out.tolist() == [0.0, 7.0]    # resources moved with the VM

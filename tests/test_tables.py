@@ -1,7 +1,7 @@
 """Precomputed tables must agree with the object-level MIG implementation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import tables as T
 from repro.core.mig import (PROFILES, GPU, blocks_of, fragmentation, get_cc,
