@@ -1,0 +1,90 @@
+"""Beyond-paper: the same trace replayed across heterogeneous fleet mixes.
+
+For each fleet preset (homogeneous A100, A30+A100, A100+H100,
+A30+A100+H100) the *identical* VM stream (same seed; host models come from
+a separate RNG stream) is replayed on the batched engine under every
+policy, plus through the sequential engine for GRMU as a cross-engine
+decision check.  Emits the usual CSV rows and writes
+``BENCH_hetero_sweep.json`` so CI can track acceptance-per-fleet and the
+hetero cross-engine match bit.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import batched as B
+from repro.core.grmu import GRMU
+from repro.sim.engine import simulate
+from repro.workload.alibaba import FLEET_PRESETS, TraceConfig, generate
+
+from .common import emit, timed
+
+SCALE = float(os.environ.get("BENCH_SCALE", "0.05"))
+OUT_PATH = os.environ.get("BENCH_HETERO_JSON", "BENCH_hetero_sweep.json")
+
+POLICIES = [("FF", B.FF), ("BF", B.BF), ("MCC", B.MCC), ("MECC", B.MECC),
+            ("GRMU", B.GRMU)]
+GRMU_KW = dict(defrag=True, consolidation_interval=24.0)
+
+
+def run() -> None:
+    report = {"scale": SCALE, "fleets": {}}
+    for fleet_name, fleet in FLEET_PRESETS.items():
+        cfg = TraceConfig(scale=SCALE, seed=1, fleet=fleet)
+        cluster, vms = generate(cfg)
+        events = B.build_events(vms, cluster)
+        cap = B.default_heavy_capacity(events)
+        entry = {
+            "models": [m.name for m in cluster.models],
+            "num_gpus": events.num_gpus,
+            "num_vms": len(vms),
+            "policies": {},
+        }
+
+        grmu_res = None
+        for pname, pid in POLICIES:
+            kw = GRMU_KW if pname == "GRMU" else {}
+            fn = B.make_replay(events, pid, **kw)
+
+            def steady():
+                o = fn(cap)
+                o["accepted"].block_until_ready()
+                return o
+
+            steady()                       # compile outside the timing
+            out, us = timed(steady, repeats=3)
+            res = B.result_from_arrays(events, pid, out)
+            if pname == "GRMU":
+                grmu_res = res
+            entry["policies"][pname] = {
+                "accepted": res.accepted,
+                "total": res.total_requests,
+                "acceptance_rate": round(res.overall_acceptance_rate, 4),
+                "migrations": res.migrations,
+                "batched_us": us,
+            }
+            emit(f"hetero.{fleet_name}.{pname}", us,
+                 f"accepted={res.accepted}/{res.total_requests}")
+
+        # Cross-engine decision check (GRMU, full feature set) against the
+        # batched result the policies loop above already produced.
+        cluster2, vms2 = generate(cfg)
+        pol = GRMU(cluster2, heavy_capacity_frac=0.30, **GRMU_KW)
+        res_py, us_py = timed(simulate, cluster2, pol, vms2, repeats=1)
+        grmu = entry["policies"]["GRMU"]
+        match = grmu_res.accepted_ids == res_py.accepted_ids
+        entry["grmu_sequential_accepted"] = res_py.accepted
+        entry["grmu_decisions_match"] = bool(match)
+        entry["grmu_sequential_us"] = us_py
+        emit(f"hetero.{fleet_name}.seq_check", us_py,
+             f"match={match} accepted={res_py.accepted}"
+             f" (batched={grmu['accepted']})")
+        if not match:
+            raise AssertionError(
+                f"hetero cross-engine mismatch on fleet {fleet_name}")
+        report["fleets"][fleet_name] = entry
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}", flush=True)

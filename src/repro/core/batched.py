@@ -9,10 +9,16 @@ state held in arrays, so that:
   * ``jax.vmap`` over policy knobs (e.g. heavy-basket capacity) runs the
     paper's §8.2 parameter sweeps as one device program,
   * on TPU the per-event scoring can use the Pallas kernels instead of the
-    (CPU-friendly) 256-entry table gathers.
+    (CPU-friendly) per-model mask-table gathers.
+
+Heterogeneous fleets replay in the same single scan: every per-model
+table is padded to a common shape and stacked along a leading model axis
+(``policy_core.Tables``), the trace carries the per-GPU model-id vector
+plus each VM's Eq. 27-30 profile mapping onto every fleet model, and all
+table lookups gather by ``(model_id, free_mask, profile)``.
 
 Feature parity with the sequential engine (validated decision-for-decision
-in tests/test_equivalence.py):
+in tests/test_equivalence.py, including on mixed A30+A100+H100 clusters):
 
   * host CPU/RAM constraints, carried as per-host float32 headroom arrays
     (the sequential ``Cluster`` accumulates in float32 in the same event
@@ -20,7 +26,8 @@ in tests/test_equivalence.py):
   * all five policies — FF/BF/MCC/MECC/GRMU — via the shared
     ``repro.core.policy_core`` scoring/selection functions;
   * MECC's windowed profile-frequency estimate, maintained *inside* the
-    scan with a two-pointer over the (static) arrival schedule;
+    scan with a two-pointer over the (static) arrival schedule, counted
+    per (model, profile);
   * GRMU defragmentation and periodic consolidation as table-driven
     in-scan operations at step-end events (ASSIGN_MASK/ASSIGN_START/FRAG
     gathers — no object state);
@@ -36,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +51,7 @@ import numpy as np
 
 from ..sim.cluster import VM, Cluster
 from ..sim.metrics import SimResult
-from .mig import PROFILE_INDEX
+from .mig import A100_40GB, DeviceModel, PROFILE_INDEX
 from . import policy_core as pc
 
 # Policy ids re-exported for callers of this module.  The old engine's
@@ -66,24 +73,28 @@ class EventTrace:
     # Per-event rows (E,), sorted by (bucket, kind, time, vm_id):
     kind: np.ndarray         # int32: DEPARTURE | ARRIVAL | STEP_END
     vm_index: np.ndarray     # int32 dense 0..N-1 (0 for step-end rows)
-    profile: np.ndarray      # int32 (0 for step-end rows)
+    profile: np.ndarray      # int32 reference-model profile (0 for step-end)
     time: np.ndarray         # float32 step start t of the row's bucket
     idx: np.ndarray          # int32: arrival order (arrivals),
     #                          step index (step ends), 0 otherwise
     # Static per-VM arrays in dense (arrival, vm_id) order (N,):
     vm_ids: np.ndarray       # int64 original vm_id per dense index
-    vm_profile: np.ndarray   # int32
+    vm_pids: np.ndarray      # (N, M) int32 profile per fleet model
+    #                          (column 0 = the reference-model profile)
+    vm_heavy: np.ndarray     # (N,) bool — full-GPU request on every model
     vm_cpu: np.ndarray       # float32
     vm_ram: np.ndarray       # float32
     # MECC observation schedule over *included* arrivals (A,):
     arr_times: np.ndarray    # float32 observation time (bucket start)
-    arr_profiles: np.ndarray  # int32
+    arr_pids: np.ndarray     # (A, M) int32 profile per fleet model
     # Step sampling times (S,):
     step_times: np.ndarray   # float64
     # Cluster shape:
     num_vms: int
     num_gpus: int
     num_hosts: int
+    models: Tuple[DeviceModel, ...]  # fleet models; [0] is the reference
+    gpu_model_id: np.ndarray  # (G,) int32 index into models
     gpu_host_id: np.ndarray  # (G,) int32
     cpu_cap: np.ndarray      # (H,) float32
     ram_cap: np.ndarray      # (H,) float32
@@ -107,10 +118,10 @@ def build_events(vms: List[VM], cluster: Union[Cluster, int],
                  horizon: Optional[float] = None) -> EventTrace:
     """Lower a VM list + cluster onto the scan's event stream.
 
-    ``cluster`` may be a ``Cluster`` (host topology + CPU/RAM caps are
-    honored) or a bare GPU count (one unconstrained host per GPU — the
-    legacy GPU-only replay).  ``horizon`` defaults to the sequential
-    engine's (max arrival + step).
+    ``cluster`` may be a ``Cluster`` (host topology + CPU/RAM caps +
+    fleet device models are honored) or a bare GPU count (one
+    unconstrained A100-40GB host per GPU — the legacy GPU-only replay).
+    ``horizon`` defaults to the sequential engine's (max arrival + step).
 
     Bucket times reuse the sequential engine's accumulated step grid but
     are carried as float32 in the scan; exact cross-engine decision
@@ -121,17 +132,32 @@ def build_events(vms: List[VM], cluster: Union[Cluster, int],
     if isinstance(cluster, Cluster):
         num_gpus = cluster.num_gpus
         num_hosts = len(cluster.hosts)
+        models = cluster.models
+        gpu_model_id = cluster.gpu_model_id.astype(np.int32)
         gpu_host_id = cluster.gpu_host_id.astype(np.int32)
         cpu_cap = cluster.host_cpu_cap.copy()
         ram_cap = cluster.host_ram_cap.copy()
+
+        def pids_of(vm: VM) -> np.ndarray:
+            return cluster.vm_pids(vm)
     else:
         num_gpus = int(cluster)
         num_hosts = num_gpus
+        models = (A100_40GB,)
+        gpu_model_id = np.zeros(num_gpus, dtype=np.int32)
         gpu_host_id = np.arange(num_gpus, dtype=np.int32)
         cpu_cap = np.full(num_hosts, np.inf, dtype=np.float32)
         ram_cap = np.full(num_hosts, np.inf, dtype=np.float32)
 
+        def pids_of(vm: VM) -> np.ndarray:
+            return np.array([PROFILE_INDEX[vm.profile.name]], np.int32)
+
+    M = len(models)
     order = sorted(vms, key=lambda v: (v.arrival, v.vm_id))
+    all_pids = (np.stack([pids_of(v) for v in order])
+                if order else np.zeros((0, M), np.int32)).astype(np.int32)
+    all_heavy = np.array([pc.heavy_request(models, all_pids[i])
+                          for i in range(len(order))], dtype=bool)
     if horizon is None:
         horizon = max((v.arrival for v in order), default=0.0) + step_hours
     # Exactly the sequential engine's sampling loop.
@@ -143,15 +169,15 @@ def build_events(vms: List[VM], cluster: Union[Cluster, int],
     S = len(step_times)
 
     rows = []  # (bucket, kind, time, tiebreak, vm_index, profile, t, idx)
-    arr_times, arr_profiles = [], []
+    arr_times, arr_rows = [], []
     for dense_i, vm in enumerate(order):
-        p = PROFILE_INDEX[vm.profile.name]
+        p = int(all_pids[dense_i, 0])  # reference-model profile
         ab = _arr_bucket(vm.arrival, step_hours)
         if ab >= S:
             continue  # past the horizon: never offered sequentially
         a_ord = len(arr_times)
         arr_times.append(step_times[ab])
-        arr_profiles.append(p)
+        arr_rows.append(all_pids[dense_i])
         rows.append((ab, ARRIVAL, vm.arrival, vm.vm_id, dense_i, p,
                      step_times[ab], a_ord))
         # A same-bucket departure is heap-popped one bucket later (the
@@ -171,14 +197,16 @@ def build_events(vms: List[VM], cluster: Union[Cluster, int],
         time=np.array([r[6] for r in rows], np.float32),
         idx=np.array([r[7] for r in rows], np.int32),
         vm_ids=np.array([v.vm_id for v in order], np.int64),
-        vm_profile=np.array([PROFILE_INDEX[v.profile.name] for v in order],
-                            np.int32),
+        vm_pids=all_pids,
+        vm_heavy=all_heavy,
         vm_cpu=np.array([v.cpu for v in order], np.float32),
         vm_ram=np.array([v.ram for v in order], np.float32),
         arr_times=np.asarray(arr_times, np.float32).reshape(-1),
-        arr_profiles=np.asarray(arr_profiles, np.int32).reshape(-1),
+        arr_pids=(np.stack(arr_rows).astype(np.int32) if arr_rows
+                  else np.zeros((0, M), np.int32)),
         step_times=np.asarray(step_times, np.float64),
         num_vms=len(order), num_gpus=num_gpus, num_hosts=num_hosts,
+        models=tuple(models), gpu_model_id=gpu_model_id,
         gpu_host_id=gpu_host_id, cpu_cap=cpu_cap, ram_cap=ram_cap,
         step_hours=step_hours)
 
@@ -195,8 +223,11 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
     dict of output arrays``.  ``policy`` and the GRMU/MECC knobs are
     static; ``heavy_capacity`` may be traced (vmap it for Fig. 6 sweeps).
     """
-    T = pc.tables_for(jnp)
+    T = pc.tables_for(jnp, events.models)
     G, N, H = events.num_gpus, max(events.num_vms, 1), events.num_hosts
+    M = len(events.models)
+    NP = T.num_profiles
+    MAXB = T.max_blocks
     S, A = len(events.step_times), max(len(events.arr_times), 1)
     # Which state the static config actually needs (keeps the scan body —
     # and therefore per-event CPU dispatch — minimal).
@@ -211,33 +242,40 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
         time=jnp.asarray(events.time),
         idx=jnp.asarray(events.idx),
     )
-    _vmp = jnp.asarray(events.vm_profile) if events.num_vms else \
-        jnp.zeros(1, jnp.int32)
+    _vmpids = jnp.asarray(events.vm_pids) if events.num_vms else \
+        jnp.zeros((1, M), jnp.int32)
+    _vmheavy = jnp.asarray(events.vm_heavy) if events.num_vms else \
+        jnp.zeros(1, bool)
     # Per-VM (cpu, ram) rows and per-GPU (cpu, ram) capacity rows, so host
     # feasibility is one gather + one fused compare.
     _vmres = jnp.stack(
         [jnp.asarray(events.vm_cpu), jnp.asarray(events.vm_ram)], axis=1) \
         if events.num_vms else jnp.zeros((1, 2), jnp.float32)
     _ghost = jnp.asarray(events.gpu_host_id)
+    _gmid = jnp.asarray(events.gpu_model_id)
     _cap_g = jnp.stack([jnp.asarray(events.cpu_cap)[_ghost],
                         jnp.asarray(events.ram_cap)[_ghost]], axis=1)
     _ccap = jnp.asarray(events.cpu_cap)
     _rcap = jnp.asarray(events.ram_cap)
     _atimes = jnp.asarray(events.arr_times) if len(events.arr_times) else \
         jnp.zeros(1, jnp.float32)
-    _aprofs = jnp.asarray(events.arr_profiles) if len(events.arr_times) \
-        else jnp.zeros(1, jnp.int32)
+    _apids = jnp.asarray(events.arr_pids) if len(events.arr_times) else \
+        jnp.zeros((1, M), jnp.int32)
+    _marange = jnp.arange(M)
+    _garange = jnp.arange(G)
+    # Each GPU's all-free mask — the fleet generalization of "255".
+    _gfull = T.full_mask[_gmid]
 
     def run(heavy_capacity):
         heavy_cap = jnp.asarray(heavy_capacity, jnp.int32)
         light_cap = jnp.int32(G) - heavy_cap
 
         state0 = dict(
-            free=jnp.full((G,), 255, jnp.int32),
+            free=jnp.asarray(_gfull, jnp.int32),
             # Per-VM row: [gpu, start, accepted].
             vmrow=jnp.tile(jnp.asarray([-1, 0, 0], jnp.int32), (N, 1)),
-            # Per-profile row: [accepted, total].
-            counts=jnp.zeros((6, 2), jnp.int32),
+            # Per-reference-profile row: [accepted, total].
+            counts=jnp.zeros((NP, 2), jnp.int32),
             # Per-host row: [cpu_used, ram_used].
             host_used=jnp.zeros((H, 2), jnp.float32),
             # Per-step row: [accepted_cum, total_cum, pms, gpus].
@@ -256,18 +294,19 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
             state0["vm_count"] = jnp.zeros((G,), jnp.int32)
             state0["last_cons"] = jnp.asarray(0.0, jnp.float32)
         if policy == MECC:
-            state0["mecc_counts"] = jnp.zeros((6,), jnp.int32)
+            state0["mecc_counts"] = jnp.zeros((M, NP), jnp.int32)
             state0["mecc_ptr"] = jnp.asarray(0, jnp.int32)
 
         # -- arrival ---------------------------------------------------------
         def arrival(state, e):
             p, vi = e["profile"], e["vm_index"]
+            pids = _vmpids[vi]                              # (M,)
             mecc_w = None
             if policy == MECC:
-                # on_arrival_observed: count the arrival, then expire
-                # history older than (now - window) with a two-pointer
-                # over the static observation schedule.
-                counts = state["mecc_counts"].at[p].add(1)
+                # on_arrival_observed: count the arrival (once per fleet
+                # model), then expire history older than (now - window)
+                # with a two-pointer over the static observation schedule.
+                counts = state["mecc_counts"].at[_marange, pids].add(1)
                 cutoff = e["time"] - jnp.float32(mecc_window)
 
                 def cond(c):
@@ -277,7 +316,7 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
 
                 def body(c):
                     ptr, cnt = c
-                    return ptr + 1, cnt.at[_aprofs[ptr]].add(-1)
+                    return ptr + 1, cnt.at[_marange, _apids[ptr]].add(-1)
 
                 ptr, counts = jax.lax.while_loop(
                     cond, body, (state["mecc_ptr"], counts))
@@ -288,29 +327,32 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
             host_ok = jnp.all(state["host_used"][_ghost] + need <= _cap_g,
                               axis=1)
             if policy == GRMU:
+                heavy = _vmheavy[vi]
                 pick, grew, grow_idx = pc.grmu_select(
-                    jnp, T, state["free"], p, host_ok, state["basket"],
-                    heavy_cap, light_cap)
-                want = jnp.where(p == HEAVY_PROFILE, pc.HEAVY_BASKET,
-                                 pc.LIGHT_BASKET)
+                    jnp, T, _gmid, state["free"], pids, heavy, host_ok,
+                    state["basket"], heavy_cap, light_cap)
+                want = jnp.where(heavy, pc.HEAVY_BASKET, pc.LIGHT_BASKET)
                 basket = jnp.where(
                     grew, state["basket"].at[grow_idx].set(want),
                     state["basket"])
                 state = dict(state, basket=basket)
             else:
-                pick = pc.select_gpu(policy, jnp, T, state["free"], p,
-                                     host_ok, mecc_w)
+                pick = pc.select_gpu(policy, jnp, T, _gmid, state["free"],
+                                     pids, host_ok, mecc_w)
             ok = pick >= 0
             okc = ok.astype(jnp.int32)
             g = jnp.maximum(pick, 0)
             mask = state["free"][g]
+            p_g = pids[_gmid[g]]      # profile under the chosen GPU's model
             row = jnp.stack([jnp.where(ok, pick, -1),
-                             jnp.where(ok, T.assign_start[mask, p], 0),
+                             jnp.where(ok, T.assign_start[_gmid[g], mask,
+                                                          p_g], 0),
                              okc])
             state = dict(
                 state,
                 free=state["free"].at[g].set(
-                    jnp.where(ok, T.assign_mask[mask, p], mask)),
+                    jnp.where(ok, T.assign_mask[_gmid[g], mask, p_g],
+                              mask)),
                 vmrow=state["vmrow"].at[vi].set(row),
                 counts=state["counts"].at[p].add(jnp.stack([okc, 1])),
                 host_used=state["host_used"].at[_ghost[g]].add(
@@ -320,20 +362,21 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
                 state = dict(state,
                              vm_count=state["vm_count"].at[g].add(okc))
             if need_defrag:
-                rej = (~ok & (p != HEAVY_PROFILE)
+                rej = (~ok & ~_vmheavy[vi]
                        if defrag_trigger == "light" else ~ok)
                 state = dict(state, rej=state["rej"] | rej)
             return state
 
         # -- departure --------------------------------------------------------
         def departure(state, e):
-            p, vi = e["profile"], e["vm_index"]
+            vi = e["vm_index"]
             r = state["vmrow"][vi]
             gpu, start = r[0], r[1]
             ok = gpu >= 0
             okc = ok.astype(jnp.int32)
             g = jnp.maximum(gpu, 0)
-            blocks = ((jnp.int32(1) << T.sizes[p]) - 1) << start
+            p_g = _vmpids[vi, _gmid[g]]
+            blocks = ((jnp.int32(1) << T.sizes[_gmid[g], p_g]) - 1) << start
             state = dict(
                 state,
                 free=state["free"].at[g].set(
@@ -351,21 +394,23 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
         # -- GRMU step-end operations ----------------------------------------
         def do_defrag(state):
             light = state["basket"] == pc.LIGHT_BASKET
-            tgt = pc.defrag_target(jnp, T, state["free"], light)
+            tgt = pc.defrag_target(jnp, T, _gmid, state["free"], light)
             do = tgt >= 0
             g = jnp.maximum(tgt, 0)
+            mid_g = _gmid[g]
             on_g = state["vmrow"][:, 0] == g
             vm_start = state["vmrow"][:, 1]
             prof_blk, vi_blk = [], []
-            for b in range(8):
+            for b in range(MAXB):
                 sel = on_g & (vm_start == b)
                 has = sel.any()
                 vi = jnp.argmax(sel)
-                prof_blk.append(jnp.where(has, _vmp[vi], -1))
+                prof_blk.append(jnp.where(has, _vmpids[vi, mid_g], -1))
                 vi_blk.append(jnp.where(has, vi, N))
             prof_blk = jnp.stack(prof_blk)
             vi_blk = jnp.stack(vi_blk)
-            starts, ok, final_mask, moved = pc.repack_gpu(jnp, T, prof_blk)
+            starts, ok, final_mask, moved = pc.repack_gpu(jnp, T, mid_g,
+                                                          prof_blk)
             apply = do & ok & (moved > 0)
             cur = vm_start[jnp.clip(vi_blk, 0, N - 1)]
             vals = jnp.where(apply & (starts >= 0), starts, cur)
@@ -385,28 +430,35 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
                 jnp.where(vm_gpu >= 0, vm_gpu, G)
             ].set(jnp.arange(N, dtype=jnp.int32))[:G]
             owner_c = jnp.clip(owner, 0, N - 1)
-            sole_p = jnp.where(owner >= 0, _vmp[owner_c], -1)
+            # The sole VM mapped onto every fleet model, (G, M); and onto
+            # its own GPU's model, (G,).
+            sole_pids = jnp.where((owner >= 0)[:, None], _vmpids[owner_c],
+                                  -1)
+            sole_own = sole_pids[_garange, _gmid]
             sole_res = jnp.where((owner >= 0)[:, None], _vmres[owner_c],
                                  jnp.float32(0.0))
             cand = pc.consolidation_candidates(
-                jnp, free, basket == pc.LIGHT_BASKET, state["vm_count"],
-                sole_p)
+                jnp, T, _gmid, free, basket == pc.LIGHT_BASKET,
+                state["vm_count"], sole_own)
             tgt_of, cpu_used, ram_used = pc.consolidation_plan(
-                jnp, T, free, cand, sole_p, sole_res[:, 0], sole_res[:, 1],
-                _ghost, state["host_used"][:, 0], state["host_used"][:, 1],
-                _ccap, _rcap)
+                jnp, T, _gmid, free, cand, sole_pids, sole_res[:, 0],
+                sole_res[:, 1], _ghost, state["host_used"][:, 0],
+                state["host_used"][:, 1], _ccap, _rcap)
             valid = tgt_of >= 0
             tgt_c = jnp.clip(tgt_of, 0, G - 1)
-            p_src = jnp.clip(sole_p, 0, 5)
-            starts = T.assign_start[free[tgt_c], p_src]
-            # Scatter receive side: each target gets exactly one source.
+            # Each source's profile under its *target's* model.
+            p_tgt = jnp.clip(sole_pids[_garange, _gmid[tgt_c]], 0, NP - 1)
+            starts = T.assign_start[_gmid[tgt_c], free[tgt_c], p_tgt]
+            # Scatter receive side: each target gets exactly one source
+            # (profile already expressed in the target's own model).
             recv_idx = jnp.where(valid, tgt_of, G)
             recv_p = jnp.full(G + 1, -1, jnp.int32).at[recv_idx].set(
-                jnp.where(valid, sole_p, -1))[:G]
-            recv_pc = jnp.clip(recv_p, 0, 5)
-            new_free = jnp.where(valid, 255, free)
+                jnp.where(valid, p_tgt, -1))[:G]
+            recv_pc = jnp.clip(recv_p, 0, NP - 1)
+            new_free = jnp.where(valid, _gfull, free)
             new_free = jnp.where(recv_p >= 0,
-                                 T.assign_mask[free, recv_pc], new_free)
+                                 T.assign_mask[_gmid, free, recv_pc],
+                                 new_free)
             vi = jnp.where(valid, owner, N)
             vmrow = state["vmrow"].at[vi, 0].set(tgt_of, mode="drop")
             vmrow = vmrow.at[vi, 1].set(starts, mode="drop")
@@ -434,7 +486,7 @@ def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
                                      state)
                 state = dict(state, last_cons=jnp.where(
                     due, e["time"], state["last_cons"]))
-            gpu_active = (state["free"] != 255).astype(jnp.int32)
+            gpu_active = (state["free"] != _gfull).astype(jnp.int32)
             pms = (jax.ops.segment_sum(gpu_active, _ghost,
                                        num_segments=H) > 0)
             sample = jnp.stack([state["counts"][:, 0].sum(),
@@ -492,14 +544,17 @@ def result_from_arrays(events: EventTrace, policy: int, out: dict
                        ) -> SimResult:
     """Assemble a SimResult from ``run``'s output arrays (host side, in
     float64, exactly how the sequential engine derives its series)."""
-    from .mig import PROFILES
+    ref_profiles = events.models[0].profiles
     accepted = np.asarray(out["accepted"], np.int64)
     total = np.asarray(out["total"], np.int64)
-    res = SimResult(policy=pc.POLICY_NAMES.get(policy, str(policy)))
+    res = SimResult(
+        policy=pc.POLICY_NAMES.get(policy, str(policy)),
+        per_profile_total={p.name: 0 for p in ref_profiles},
+        per_profile_accepted={p.name: 0 for p in ref_profiles})
     res.total_requests = int(total.sum())
     res.accepted = int(accepted.sum())
     res.rejected = res.total_requests - res.accepted
-    for i, p in enumerate(PROFILES):
+    for i, p in enumerate(ref_profiles):
         res.per_profile_total[p.name] = int(total[i])
         res.per_profile_accepted[p.name] = int(accepted[i])
     res.hourly_times = [float(t) for t in events.step_times]
@@ -524,7 +579,7 @@ def sweep_heavy_capacity(events: EventTrace, fracs: np.ndarray,
     Defaults to the 'DB' configuration (defrag & consolidation off — the
     point whose acceptance the paper's sweep explores); pass
     ``defrag=True`` / ``consolidation_interval=...`` for full GRMU.
-    Returns (len(fracs), 6) accepted-per-profile."""
+    Returns (len(fracs), num_profiles) accepted-per-reference-profile."""
     cfg.setdefault("defrag", False)
     cfg.setdefault("consolidation_interval", None)
     caps = jnp.asarray(np.round(

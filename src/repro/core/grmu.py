@@ -2,8 +2,9 @@
 
 Multi-stage placement:
   * Dual-Basket Pooling (Alg. 2): GPUs live in a pool ordered by
-    globalIndex; a capacity-capped *heavy basket* serves 7g.40gb VMs and a
-    *light basket* serves everything else.  Each basket starts with one GPU.
+    globalIndex; a capacity-capped *heavy basket* serves full-GPU VMs
+    (7g.40gb on the paper's A100-40GB) and a *light basket* serves
+    everything else.  Each basket starts with one GPU.
   * Allocation (Alg. 3): first-fit over the chosen basket (globalIndex
     order) with the default CC-maximizing block placement; on failure, grow
     the basket from the pool while strictly below the basket's cap.
@@ -11,14 +12,16 @@ Multi-stage placement:
     the most fragmented light-basket GPU via the default policy and
     intra-GPU-migrate only the VMs whose blocks changed.
   * Consolidation (Alg. 5): every ``consolidation_interval`` hours, merge
-    pairs of half-full single-profile (3g/4g.20gb) light GPUs; emptied GPUs
-    return to the pool.
+    pairs of half-full single-profile (half-GPU, e.g. 3g/4g.20gb) light
+    GPUs; emptied GPUs return to the pool.
 
 This class is the sequential *driver*: all decision logic (basket
 selection/growth, defrag target + repack, consolidation candidate pairing)
 lives in ``repro.core.policy_core`` and is shared verbatim with the
 batched JAX engine; here we only apply the decisions to the object-level
-``Cluster``.
+``Cluster``.  Heterogeneous fleets work transparently: requests are heavy
+iff they map to the full-GPU profile on every fleet model, and defrag /
+consolidation resolve profiles against each GPU's own device model.
 """
 from __future__ import annotations
 
@@ -27,11 +30,8 @@ from typing import List, Optional
 import numpy as np
 
 from ..sim.cluster import Cluster, VM
-from .mig import PROFILE_INDEX
 from . import policy_core as pc
 from .policies import PlacementPolicy
-
-_T = pc.tables_for(np)
 
 
 class SortedGpuList:
@@ -74,7 +74,7 @@ class GRMU(PlacementPolicy):
                  defrag: bool = True, defrag_trigger: str = "light"):
         """``defrag_trigger``: 'light' (default) runs Alg. 4 only when a
         light-profile VM was rejected — defragmenting the light basket
-        cannot help a rejected 7g.40gb, which needs a whole GPU; 'any'
+        cannot help a rejected full-GPU VM, which needs a whole GPU; 'any'
         triggers on every rejection (the literal §7.1 wording)."""
         super().__init__(cluster)
         self.defrag_trigger = defrag_trigger
@@ -112,12 +112,12 @@ class GRMU(PlacementPolicy):
 
     # -- Alg. 3: allocation -------------------------------------------------
     def place(self, vm: VM) -> bool:
-        heavy = vm.profile.name == "7g.40gb"
+        heavy = self._is_heavy(vm)
         basket = self.heavy if heavy else self.light
         pick, grew, _ = pc.grmu_select(
-            np, _T, self.cluster.free_masks, self._profile_idx(vm),
-            self.cluster.host_fits_vec(vm), self._basket_array(),
-            self.heavy_capacity, self.light_capacity)
+            np, self._T, self._mid, self.cluster.free_masks,
+            self._pids(vm), heavy, self.cluster.host_fits_vec(vm),
+            self._basket_array(), self.heavy_capacity, self.light_capacity)
         if grew:
             # The grown GPU is the lowest-index pool member == pool.get();
             # it joins the basket even when host resources then block the
@@ -130,19 +130,23 @@ class GRMU(PlacementPolicy):
     # -- Alg. 4: defragmentation (intra-GPU migration) ------------------------
     def defragment(self) -> int:
         """Re-pack the most fragmented light GPU; returns #migrations."""
-        gid = int(pc.defrag_target(np, _T, self.cluster.free_masks,
+        gid = int(pc.defrag_target(np, self._T, self._mid,
+                                   self.cluster.free_masks,
                                    self._light_mask()))
         if gid < 0:
             return 0
         gpu = self.cluster.gpu_index[gid][1]
+        mid_g = int(self._mid[gid])
+        model = self.cluster.models[mid_g]
         # Residents keyed by current start block (starts are unique per
         # GPU); ascending block order == the sequential replay order.
-        prof_by_block = np.full(8, -1, dtype=np.int32)
+        prof_by_block = np.full(self._T.max_blocks, -1, dtype=np.int32)
         vm_by_block = {}
         for vm_id, (profile, start) in gpu.placements.items():
-            prof_by_block[start] = PROFILE_INDEX[profile.name]
+            prof_by_block[start] = model.profile_index[profile.name]
             vm_by_block[start] = vm_id
-        starts, ok, _, moved = pc.repack_gpu(np, _T, prof_by_block)
+        starts, ok, _, moved = pc.repack_gpu(np, self._T, mid_g,
+                                             prof_by_block)
         if not ok or int(moved) == 0:
             # Re-pack painted itself into a corner (the paper assumes the
             # replay always succeeds — abort safely), or nothing moved.
@@ -150,7 +154,8 @@ class GRMU(PlacementPolicy):
         # IntraMigrate: apply via release-all/re-place to avoid transient
         # overlaps (device-level this is a staged copy through spare blocks).
         items = [(vm_by_block[b], gpu.placements[vm_by_block[b]][0],
-                  int(starts[b])) for b in range(8) if prof_by_block[b] >= 0]
+                  int(starts[b]))
+                 for b in range(self._T.max_blocks) if prof_by_block[b] >= 0]
         for vm_id, _, _ in items:
             gpu.release(vm_id)
         for vm_id, prof, new_start in items:
@@ -166,8 +171,9 @@ class GRMU(PlacementPolicy):
         """Merge half-full single-profile light GPUs; returns #migrations."""
         cl = self.cluster
         G = cl.num_gpus
+        M = len(cl.models)
         vm_count = np.zeros(G, dtype=np.int32)
-        sole_p = np.full(G, -1, dtype=np.int32)
+        sole_pids = np.full((G, M), -1, dtype=np.int32)
         sole_vm = np.full(G, -1, dtype=np.int64)
         sole_cpu = np.zeros(G, dtype=np.float32)
         sole_ram = np.zeros(G, dtype=np.float32)
@@ -175,19 +181,21 @@ class GRMU(PlacementPolicy):
             gpu = cl.gpu_index[gid][1]
             vm_count[gid] = len(gpu.placements)
             if len(gpu.placements) == 1:
-                vm_id, (prof, _) = next(iter(gpu.placements.items()))
-                sole_p[gid] = PROFILE_INDEX[prof.name]
-                sole_vm[gid] = vm_id
+                vm_id = next(iter(gpu.placements))
                 vm = cl.vms[vm_id]
+                sole_pids[gid] = cl.vm_pids(vm)
+                sole_vm[gid] = vm_id
                 sole_cpu[gid] = np.float32(vm.cpu)
                 sole_ram[gid] = np.float32(vm.ram)
-        cand = pc.consolidation_candidates(np, cl.free_masks,
-                                           self._light_mask(), vm_count,
-                                           sole_p)
+        # The sole VM's profile on its *own* GPU's model.
+        sole_own = sole_pids[np.arange(G), self._mid]
+        cand = pc.consolidation_candidates(np, self._T, self._mid,
+                                           cl.free_masks, self._light_mask(),
+                                           vm_count, sole_own)
         tgt_of, _, _ = pc.consolidation_plan(
-            np, _T, cl.free_masks, cand, sole_p, sole_cpu, sole_ram,
-            cl.gpu_host_id, cl.host_cpu_used, cl.host_ram_used,
-            cl.host_cpu_cap, cl.host_ram_cap)
+            np, self._T, self._mid, cl.free_masks, cand, sole_pids,
+            sole_cpu, sole_ram, cl.gpu_host_id, cl.host_cpu_used,
+            cl.host_ram_used, cl.host_cpu_cap, cl.host_ram_cap)
         moved = 0
         for src in np.flatnonzero(tgt_of >= 0):
             src = int(src)
@@ -205,7 +213,7 @@ class GRMU(PlacementPolicy):
     def on_step_end(self, now: float, rejected: List[VM]) -> None:
         if rejected and self.defrag_enabled:
             if (self.defrag_trigger == "any"
-                    or any(v.profile.name != "7g.40gb" for v in rejected)):
+                    or any(not self._is_heavy(v) for v in rejected)):
                 self.defragment()
         if (self.consolidation_interval is not None
                 and now - self._last_consolidation

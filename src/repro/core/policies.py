@@ -7,7 +7,10 @@ CC-maximizing policy (Algorithm 1), which cannot be overridden.
 The classes here are thin *drivers*: scan feasibility, scoring and pick
 semantics live in ``repro.core.policy_core`` (shared verbatim with the
 batched JAX engine); this module only adapts them to the object-level
-``Cluster`` and keeps MECC's arrival history.
+``Cluster`` and keeps MECC's arrival history.  Each driver binds the
+policy core's :class:`~repro.core.policy_core.Tables` for its cluster's
+fleet (one model axis per device model), so the same classes serve
+homogeneous and heterogeneous clusters.
 """
 from __future__ import annotations
 
@@ -18,9 +21,6 @@ import numpy as np
 
 from ..sim.cluster import Cluster, VM
 from . import policy_core as pc
-from .mig import PROFILES, PROFILE_INDEX
-
-_T = pc.tables_for(np)
 
 
 class PlacementPolicy:
@@ -37,10 +37,17 @@ class PlacementPolicy:
         self.migrations = 0
         self.intra_migrations = 0
         self.inter_migrations = 0
+        # Fleet-wide tables + per-GPU model ids for the policy core.
+        self._T = pc.tables_for(np, cluster.models)
+        self._mid = cluster.gpu_model_id
 
     # -- helpers ------------------------------------------------------------
-    def _profile_idx(self, vm: VM) -> int:
-        return PROFILE_INDEX[vm.profile.name]
+    def _pids(self, vm: VM) -> np.ndarray:
+        """Per-model profile indices of the request, (num_models,)."""
+        return self.cluster.vm_pids(vm)
+
+    def _is_heavy(self, vm: VM) -> bool:
+        return pc.heavy_request(self.cluster.models, self._pids(vm))
 
     def _place_on(self, vm: VM, gpu_idx: int) -> bool:
         gpu = self.cluster.gpu_index[int(gpu_idx)][1]
@@ -53,8 +60,8 @@ class PlacementPolicy:
     def place(self, vm: VM) -> bool:
         if self.POLICY_ID is None:
             raise NotImplementedError
-        pick = pc.select_gpu(self.POLICY_ID, np, _T, self.cluster.free_masks,
-                             self._profile_idx(vm),
+        pick = pc.select_gpu(self.POLICY_ID, np, self._T, self._mid,
+                             self.cluster.free_masks, self._pids(vm),
                              self.cluster.host_fits_vec(vm),
                              self._mecc_weights())
         if pick < 0:
@@ -93,24 +100,30 @@ class MaxCC(PlacementPolicy):
 class MaxECC(PlacementPolicy):
     """MECC (Algorithm 7): like MCC but each profile's slot count is
     weighted by its empirical arrival frequency over a look-back window
-    (n = 24 h gave the lowest prediction error in the paper)."""
+    (n = 24 h gave the lowest prediction error in the paper).
+
+    The windowed counts are kept per (model, profile): each arrival
+    increments its Eq. 27-30 profile on every fleet model, so scoring a
+    GPU weights that GPU's model's profile counts."""
     name = "MECC"
     POLICY_ID = pc.MECC
 
     def __init__(self, cluster: Cluster, window_hours: float = 24.0):
         super().__init__(cluster)
         self.window = window_hours
-        self.history: Deque[Tuple[float, int]] = deque()
-        self._counts = np.zeros(len(PROFILES), dtype=np.int64)
+        self.history: Deque[Tuple[float, np.ndarray]] = deque()
+        self._counts = np.zeros(
+            (len(cluster.models), self._T.num_profiles), dtype=np.int64)
+        self._m_arange = np.arange(len(cluster.models))
 
     def on_arrival_observed(self, vm: VM, now: float) -> None:
-        pi = self._profile_idx(vm)
-        self.history.append((now, pi))
-        self._counts[pi] += 1
+        pids = self._pids(vm)
+        self.history.append((now, pids))
+        self._counts[self._m_arange, pids] += 1
         cutoff = now - self.window
         while self.history and self.history[0][0] < cutoff:
             _, old = self.history.popleft()
-            self._counts[old] -= 1
+            self._counts[self._m_arange, old] -= 1
 
     def _mecc_weights(self) -> np.ndarray:
         return pc.mecc_weights(np, self._counts)

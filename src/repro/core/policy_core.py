@@ -11,6 +11,16 @@ drives both engines:
   * ``repro.core.batched`` — the ``lax.scan`` replay engine
     (``xp = jax.numpy``, jit/vmap-able, whole trace on device).
 
+Every function is additionally parameterized over a *fleet* of device
+models: :class:`Tables` pads each model's mask-indexed tables to a common
+shape and stacks them along a leading model axis, and every scoring /
+selection / defrag / consolidation function takes the per-GPU model-id
+vector ``mid`` plus per-model profile indices ``pids`` (a VM request is a
+vector of profile indices, one per model — Eq. 27-30 map the same GPU
+requirement onto each model's profile table).  A homogeneous A100 cluster
+is simply the one-model fleet with ``mid == 0`` everywhere, and reproduces
+the pre-fleet scores bit for bit.
+
 Scoring is integer-only (MECC uses the raw windowed counts as weights
 rather than normalized probabilities — argmax-equivalent since the
 normalizer is a positive constant) so both backends tie-break bit-for-bit
@@ -20,59 +30,112 @@ scan order.
 """
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import numpy as np
 
-from . import tables as _np_tables
+from .mig import A100_40GB, DeviceModel
+from .tables import tables_for_model
 
 # Policy identifiers (shared by both engines).
 FF, BF, MCC, MECC, GRMU = 0, 1, 2, 3, 4
 POLICY_IDS = {"FF": FF, "BF": BF, "MCC": MCC, "MECC": MECC, "GRMU": GRMU}
 POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
 
-# PROFILES index of 7g.40gb — the heavy-basket class.
-HEAVY_PROFILE = 5
+# Legacy A100-40GB constants (the single-model fleet's model 0).
+HEAVY_PROFILE = A100_40GB.heavy_profile          # 5 — 7g.40gb
+LOWER_HALF_FREE = A100_40GB.lower_half_free      # 0x0F
+UPPER_HALF_FREE = A100_40GB.upper_half_free      # 0xF0
+CONSOLIDATABLE = A100_40GB.consolidatable        # (3, 4)
 
 # GRMU basket labels (Alg. 2): a GPU is in exactly one.
 POOL, HEAVY_BASKET, LIGHT_BASKET = 0, 1, 2
 
-# Free-mask values of a half-full GPU (Alg. 5 consolidation candidates).
-LOWER_HALF_FREE = 0x0F   # blocks 0-3 free (upper half occupied)
-UPPER_HALF_FREE = 0xF0   # blocks 4-7 free (lower half occupied)
-
-# Profile indices eligible for consolidation (3g.20gb, 4g.20gb).
-CONSOLIDATABLE = (3, 4)
+DEFAULT_MODELS: Tuple[DeviceModel, ...] = (A100_40GB,)
 
 
 class Tables:
-    """The §5 mask-indexed tables materialized in one array namespace.
+    """Per-fleet mask-indexed tables materialized in one array namespace.
 
-    Integer tables are widened to int32 so NumPy and JAX index/compare with
-    the same value ranges (JAX would otherwise default differently).
+    Each model's §5 tables are padded to the fleet-wide maximum mask-space
+    (``1 << max(num_blocks)``) and profile count, then stacked along a
+    leading model axis, so every lookup is a gather by
+    ``(model_id, free_mask, profile)``.  Padded entries are never-feasible
+    (``fits`` False, ``assign_start`` -1, ``counts_after`` 0), so out-of-
+    model profile indices and masks score below every real option.
+
+    Integer tables are widened to int32 so NumPy and JAX index/compare
+    with the same value ranges (JAX would otherwise default differently).
     """
 
-    def __init__(self, xp):
+    def __init__(self, xp, models: Sequence[DeviceModel] = DEFAULT_MODELS):
         self.xp = xp
-        self.fits = xp.asarray(_np_tables.FITS_TABLE)                # (256,6) bool
-        self.pop = xp.asarray(_np_tables.POPCOUNT_TABLE.astype(np.int32))
-        self.sizes = xp.asarray(_np_tables.PROFILE_SIZE.astype(np.int32))
-        self.cc_after = xp.asarray(_np_tables.CC_AFTER_TABLE.astype(np.int32))
-        self.counts_after = xp.asarray(
-            _np_tables.COUNTS_AFTER_TABLE.astype(np.int32))       # (256,6,6)
-        self.assign_mask = xp.asarray(
-            _np_tables.ASSIGN_MASK_TABLE.astype(np.int32))
-        self.assign_start = xp.asarray(
-            _np_tables.ASSIGN_START_TABLE.astype(np.int32))
-        self.frag = xp.asarray(_np_tables.FRAG_TABLE)                # float32
+        self.models: Tuple[DeviceModel, ...] = tuple(models)
+        if not self.models:
+            raise ValueError("Tables needs at least one device model")
+        mts = [tables_for_model(m) for m in self.models]
+        M = len(mts)
+        NM = max(t.num_masks for t in mts)
+        NP = max(t.num_profiles for t in mts)
+        self.num_models = M
+        self.num_masks = NM
+        self.num_profiles = NP
+        self.max_blocks = max(m.num_blocks for m in self.models)
+
+        def pad(rows, fill, dtype):
+            """Stack per-model arrays padded to a common trailing shape."""
+            shape = (M, NM, NP, NP)[:1 + rows[0].ndim]
+            out = np.full(shape, fill, dtype=dtype)
+            for i, r in enumerate(rows):
+                out[(i,) + tuple(slice(0, s) for s in r.shape)] = r
+            return xp.asarray(out)
+
+        self.fits = pad([t.fits for t in mts], False, bool)
+        self.pop = pad([t.popcount for t in mts], 0, np.int32)
+        self.cc_after = pad([t.cc_after for t in mts], -1, np.int32)
+        self.counts_after = pad([t.counts_after for t in mts], 0, np.int32)
+        self.assign_mask = pad([t.assign_mask for t in mts], 0, np.int32)
+        self.assign_start = pad([t.assign_start for t in mts], -1, np.int32)
+        self.frag = pad([t.frag for t in mts], 0.0, np.float32)
+        # sizes is (M, NP): pad rows manually (pad() assumes mask-major).
+        sizes = np.zeros((M, NP), np.int32)
+        cons = np.zeros((M, NP), bool)
+        for i, (m, t) in enumerate(zip(self.models, mts)):
+            sizes[i, :t.num_profiles] = t.profile_size
+            for ci in m.consolidatable:
+                cons[i, ci] = True
+        self.sizes = xp.asarray(sizes)
+        self.consolidatable = xp.asarray(cons)
+        # Per-model scalars.
+        self.full_mask = xp.asarray(
+            np.array([m.full_mask for m in self.models], np.int32))
+        self.heavy = xp.asarray(
+            np.array([m.heavy_profile for m in self.models], np.int32))
+        self.lower_half = xp.asarray(
+            np.array([m.lower_half_free for m in self.models], np.int32))
+        self.upper_half = xp.asarray(
+            np.array([m.upper_half_free for m in self.models], np.int32))
 
 
 _TABLES_CACHE: dict = {}
 
 
-def tables_for(xp) -> Tables:
-    key = xp.__name__
+def tables_for(xp, models: Sequence[DeviceModel] = DEFAULT_MODELS) -> Tables:
+    # Keyed by model values (not names): a custom model reusing a preset
+    # name must not alias the preset's tables.
+    key = (xp.__name__, tuple(models))
     if key not in _TABLES_CACHE:
-        _TABLES_CACHE[key] = Tables(xp)
+        _TABLES_CACHE[key] = Tables(xp, models)
     return _TABLES_CACHE[key]
+
+
+def heavy_request(models: Sequence[DeviceModel], pids) -> bool:
+    """Host-side heavy classification of a request: heavy iff it maps to
+    the full-GPU profile on *every* model of the fleet (on the paper's
+    single-A100 fleet this is exactly ``profile == 7g.40gb``).  Both
+    engines precompute this from the same per-model profile-id vector."""
+    return all(m.heavy_profile >= 0 and int(pids[i]) == m.heavy_profile
+               for i, m in enumerate(models))
 
 
 # ---------------------------------------------------------------------------
@@ -112,36 +175,45 @@ def _fori(xp, n, body, init):
 def mecc_weights(xp, counts):
     """MECC profile weights from windowed arrival counts.
 
-    The paper weights by empirical probabilities P(p) = count_p / total;
-    because the normalizer is a shared positive constant, weighting by raw
-    integer counts selects the same argmax — and keeps the scoring exactly
+    ``counts`` is (num_models, num_profiles): each arrival increments its
+    mapped profile on *every* model, so the per-model rows are the same
+    windowed history viewed through each model's profile table.  The paper
+    weights by empirical probabilities P(p) = count_p / total; because the
+    normalizer is a shared positive constant, weighting by raw integer
+    counts selects the same argmax — and keeps the scoring exactly
     comparable across float widths.  Empty history degrades to uniform.
     """
     counts = xp.asarray(counts)
     return xp.where(counts.sum() > 0, counts, xp.ones_like(counts))
 
 
-def placement_scores(policy, xp, T, free, profile, fits, mecc_w=None):
+def placement_scores(policy, xp, T, mid, free, prof_g, fits, mecc_w=None):
     """Per-GPU integer score under ``policy``; infeasible GPUs score below
-    every feasible one.  The chosen GPU is the first maximizer."""
+    every feasible one.  ``prof_g`` is the requested profile per GPU
+    (already mapped onto each GPU's model).  The chosen GPU is the first
+    maximizer."""
     if policy == FF:
         return fits.astype(xp.int32)
     if policy == BF:
         # Minimize leftover free blocks == maximize (size - popcount).
-        return xp.where(fits, T.sizes[profile] - T.pop[free], -99)
+        return xp.where(fits, T.sizes[mid, prof_g] - T.pop[mid, free], -99)
     if policy == MCC:
-        return xp.where(fits, T.cc_after[free, profile], -1)
+        return xp.where(fits, T.cc_after[mid, free, prof_g], -1)
     if policy == MECC:
-        ecc = T.counts_after[free, profile] @ mecc_w.astype(T.counts_after.dtype)
+        w = mecc_w.astype(T.counts_after.dtype)
+        ecc = (T.counts_after[mid, free, prof_g] * w[mid]).sum(axis=-1)
         return xp.where(fits, ecc, -1)
     raise ValueError(f"unknown baseline policy id {policy}")
 
 
-def select_gpu(policy, xp, T, free, profile, host_ok, mecc_w=None):
-    """Feasibility-mask + score + first-maximizer pick.  Returns the GPU
+def select_gpu(policy, xp, T, mid, free, pids, host_ok, mecc_w=None):
+    """Feasibility-mask + score + first-maximizer pick.  ``pids`` is the
+    request's per-model profile-id vector (num_models,).  Returns the GPU
     globalIndex, or -1 when no GPU is feasible (profile or host level)."""
-    fits = T.fits[free, profile] & host_ok
-    scores = placement_scores(policy, xp, T, free, profile, fits, mecc_w)
+    prof_g = pids[mid]
+    fits = T.fits[mid, free, prof_g] & host_ok
+    scores = placement_scores(policy, xp, T, mid, free, prof_g, fits,
+                              mecc_w)
     return xp.where(xp.any(fits), xp.argmax(scores), -1)
 
 
@@ -149,24 +221,26 @@ def select_gpu(policy, xp, T, free, profile, host_ok, mecc_w=None):
 # GRMU allocation (Algs. 2-3)
 # ---------------------------------------------------------------------------
 
-def grmu_select(xp, T, free, profile, host_ok, basket, heavy_cap, light_cap):
+def grmu_select(xp, T, mid, free, pids, is_heavy, host_ok, basket,
+                heavy_cap, light_cap):
     """Dual-basket first-fit with capacity-capped growth (Alg. 3).
 
-    ``basket`` holds POOL/HEAVY_BASKET/LIGHT_BASKET per GPU (any other
-    value = unmanaged, never selectable).  Growth is allowed while the
-    basket holds strictly fewer GPUs than its cap; the grown GPU is the
-    lowest-index pool member.  A grown GPU joins the basket even when the
-    host-level CPU/RAM check then blocks the placement (the paper's Alg. 3
-    fetches first, places second) — in that case pick is -1 but ``grew``
-    is still True.
+    ``is_heavy`` is the request's precomputed heavy flag (see
+    :func:`heavy_request`).  ``basket`` holds POOL/HEAVY_BASKET/
+    LIGHT_BASKET per GPU (any other value = unmanaged, never selectable).
+    Growth is allowed while the basket holds strictly fewer GPUs than its
+    cap; the grown GPU is the lowest-index pool member.  A grown GPU
+    joins the basket even when the host-level CPU/RAM check then blocks
+    the placement (the paper's Alg. 3 fetches first, places second) — in
+    that case pick is -1 but ``grew`` is still True.
 
     Returns ``(pick, grew, grow_idx)``.
     """
-    is_heavy = xp.asarray(profile == HEAVY_PROFILE)
+    is_heavy = xp.asarray(is_heavy)
     want = xp.where(is_heavy, HEAVY_BASKET, LIGHT_BASKET)
     cap = xp.where(is_heavy, heavy_cap, light_cap)
     in_basket = basket == want
-    fits = T.fits[free, profile] & host_ok & in_basket
+    fits = T.fits[mid, free, pids[mid]] & host_ok & in_basket
     pick = first_true(xp, fits)
     pool_free = basket == POOL
     grew = (pick < 0) & (in_basket.sum() < cap) & xp.any(pool_free)
@@ -179,44 +253,45 @@ def grmu_select(xp, T, free, profile, host_ok, basket, heavy_cap, light_cap):
 # GRMU defragmentation (Alg. 4)
 # ---------------------------------------------------------------------------
 
-def defrag_target(xp, T, free, light_mask):
+def defrag_target(xp, T, mid, free, light_mask):
     """Most fragmented light-basket GPU (first maximizer), or -1 when no
     light GPU has positive fragmentation or the maximizer is empty (the
     paper's sequential code aborts outright in that case)."""
-    scores = xp.where(light_mask, T.frag[free], -1.0)
+    scores = xp.where(light_mask, T.frag[mid, free], -1.0)
     g = xp.argmax(scores)
-    ok = (scores[g] > 0.0) & (free[g] != 255)
+    ok = (scores[g] > 0.0) & (free[g] != T.full_mask[mid[g]])
     return xp.where(ok, g, -1)
 
 
-def repack_gpu(xp, T, profiles_by_block):
+def repack_gpu(xp, T, mid_g, profiles_by_block):
     """Replay a GPU's residents through the default policy on a mock GPU.
 
-    ``profiles_by_block`` is an (8,) int array: the profile index of the VM
+    ``mid_g`` is the GPU's model id; ``profiles_by_block`` is a
+    (max_blocks,) int array: the profile index (on that model) of the VM
     whose instance *starts* at block b, or -1.  Iterating blocks in
     ascending order replays VMs in current-placement order, exactly like
     the sequential Alg. 4 replay.
 
-    Returns ``(new_starts (8,), ok, final_mask, moved)``: the re-packed
-    start per original start block (-1 where no VM), whether every VM
-    re-fit (the paper assumes yes; callers must abort the defrag when
-    False), the mock GPU's final free mask, and how many VMs changed
+    Returns ``(new_starts (max_blocks,), ok, final_mask, moved)``: the
+    re-packed start per original start block (-1 where no VM), whether
+    every VM re-fit (the paper assumes yes; callers must abort the defrag
+    when False), the mock GPU's final free mask, and how many VMs changed
     blocks (the intra-migration count).
     """
-    mock = xp.asarray(255)
+    mock = T.full_mask[mid_g]
     ok = xp.asarray(True)
     moved = xp.asarray(0)
     new_starts = []
-    for b in range(8):
+    for b in range(T.max_blocks):
         p = profiles_by_block[b]
         has = p >= 0
         pp = xp.maximum(p, 0)
-        fit = T.fits[mock, pp] & has
+        fit = T.fits[mid_g, mock, pp] & has
         ok = ok & (fit | ~has)
-        ns = xp.where(fit, T.assign_start[mock, pp], -1)
+        ns = xp.where(fit, T.assign_start[mid_g, mock, pp], -1)
         new_starts.append(ns)
         moved = moved + xp.where(fit & (ns != b), 1, 0)
-        mock = xp.where(fit, T.assign_mask[mock, pp], mock)
+        mock = xp.where(fit, T.assign_mask[mid_g, mock, pp], mock)
     return xp.stack(new_starts), ok, mock, moved
 
 
@@ -224,25 +299,32 @@ def repack_gpu(xp, T, profiles_by_block):
 # GRMU consolidation (Alg. 5)
 # ---------------------------------------------------------------------------
 
-def consolidation_candidates(xp, free, light_mask, vm_count, sole_profile):
-    """Half-full, single-VM light GPUs holding a 3g/4g.20gb instance."""
-    half = (free == LOWER_HALF_FREE) | (free == UPPER_HALF_FREE)
-    prof_ok = ((sole_profile == CONSOLIDATABLE[0])
-               | (sole_profile == CONSOLIDATABLE[1]))
+def consolidation_candidates(xp, T, mid, free, light_mask, vm_count,
+                             sole_profile):
+    """Half-full, single-VM light GPUs holding a half-GPU instance
+    (3g/4g.20gb on the A100-40GB).  ``sole_profile`` is the sole VM's
+    profile index on its own GPU's model (-1 where not single-VM)."""
+    half = (free == T.lower_half[mid]) | (free == T.upper_half[mid])
+    prof_ok = (T.consolidatable[mid, xp.maximum(sole_profile, 0)]
+               & (sole_profile >= 0))
     return light_mask & half & (vm_count == 1) & prof_ok
 
 
-def consolidation_plan(xp, T, free, cand, sole_profile, sole_cpu, sole_ram,
-                       gpu_host, cpu_used, ram_used, cpu_cap, ram_cap):
+def consolidation_plan(xp, T, mid, free, cand, sole_pids, sole_cpu,
+                       sole_ram, gpu_host, cpu_used, ram_used, cpu_cap,
+                       ram_cap):
     """Greedy pairing of consolidation candidates (Alg. 5's while loop).
 
-    Scans sources in globalIndex order; each source merges onto the first
-    later still-available candidate that fits its profile (4g.20gb only
-    fits a free lower half) and whose host has CPU/RAM headroom.  Paired
-    GPUs leave the candidate set; a source with no feasible target is
-    dropped (it cannot become a target afterwards, matching the paper's
-    destructive pop).  Host headroom is updated pair by pair in scan order
-    so both engines evolve resource state identically.
+    ``sole_pids`` is (G, num_models): each candidate GPU's sole VM mapped
+    onto every fleet model (-1 rows where no sole VM), so a source's
+    profile is resolved against each potential *target's* model.  Scans
+    sources in globalIndex order; each source merges onto the first later
+    still-available candidate that fits its profile (4g.20gb only fits a
+    free lower half) and whose host has CPU/RAM headroom.  Paired GPUs
+    leave the candidate set; a source with no feasible target is dropped
+    (it cannot become a target afterwards, matching the paper's
+    destructive pop).  Host headroom is updated pair by pair in scan
+    order so both engines evolve resource state identically.
 
     Returns ``(tgt_of, cpu_used, ram_used)`` where ``tgt_of[g]`` is the
     target GPU for source ``g`` or -1.
@@ -252,12 +334,13 @@ def consolidation_plan(xp, T, free, cand, sole_profile, sole_cpu, sole_ram,
 
     def body(g, carry):
         avail, tgt_of, cpu_u, ram_u = carry
-        p = xp.maximum(sole_profile[g], 0)
+        # Source g's profile under each candidate target's model.
+        p_t = xp.maximum(sole_pids[g, mid], 0)
         c, r, h = sole_cpu[g], sole_ram[g], gpu_host[g]
         host_ok = ((gpu_host == h)
                    | ((cpu_u[gpu_host] + c <= cpu_cap[gpu_host])
                       & (ram_u[gpu_host] + r <= ram_cap[gpu_host])))
-        feasible = avail & (gids > g) & T.fits[free, p] & host_ok
+        feasible = avail & (gids > g) & T.fits[mid, free, p_t] & host_ok
         tgt = first_true(xp, feasible)
         do = avail[g] & (tgt >= 0)
         tgt_c = xp.maximum(tgt, 0)
@@ -283,8 +366,8 @@ __all__ = [
     "FF", "BF", "MCC", "MECC", "GRMU", "POLICY_IDS", "POLICY_NAMES",
     "HEAVY_PROFILE", "POOL", "HEAVY_BASKET", "LIGHT_BASKET",
     "LOWER_HALF_FREE", "UPPER_HALF_FREE", "CONSOLIDATABLE",
-    "Tables", "tables_for", "first_true", "mecc_weights",
-    "placement_scores", "select_gpu", "grmu_select",
-    "defrag_target", "repack_gpu",
+    "DEFAULT_MODELS", "Tables", "tables_for", "heavy_request",
+    "first_true", "mecc_weights", "placement_scores", "select_gpu",
+    "grmu_select", "defrag_target", "repack_gpu",
     "consolidation_candidates", "consolidation_plan",
 ]

@@ -1,12 +1,14 @@
 """Pallas TPU kernel: batched Configuration Capability scoring (Eq. 1).
 
-Input is a 2D tile of int32 free-block masks; the 18 slot templates are
-compile-time constants, so the body is a fully unrolled chain of VPU
-bitwise-AND + compare + add ops — no gathers, no tables, perfectly
-vectorized across the (sublane, lane) tile.  This is the TPU-native
-adaptation of the CPU-side 256-entry lookup table (``core.tables``):
-a table gather would serialize on the VPU, whereas 18 unrolled mask
-compares stream at full lane width.
+Input is a 2D tile of int32 free-block masks; the device model's slot
+templates (18 for the A100-class models, 9 for the A30) are compile-time
+constants, so the body is a fully unrolled chain of VPU bitwise-AND +
+compare + add ops — no gathers, no tables, perfectly vectorized across
+the (sublane, lane) tile.  This is the TPU-native adaptation of the
+CPU-side per-model lookup table (``core.tables``): a table gather would
+serialize on the VPU, whereas the unrolled mask compares stream at full
+lane width.  One kernel specialization is compiled per device model
+(there are four presets).
 
 Block shape: (BLOCK_ROWS, 128) int32 — 128 lanes is the v5e native lane
 width; BLOCK_ROWS=64 keeps the working set at 64*128*4B = 32 KiB in +
@@ -15,32 +17,35 @@ double-buffer freely.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.mig import SLOT_MASKS
+from ..core.mig import A100_40GB, DeviceModel
 
 BLOCK_ROWS = 64
 LANES = 128
 
 
-def _cc_kernel(mask_ref, out_ref):
+def _cc_kernel(slot_masks, mask_ref, out_ref):
     m = mask_ref[...]
     cc = jnp.zeros_like(m)
-    for sm in SLOT_MASKS:          # 18 compile-time-unrolled templates
+    for sm in slot_masks:          # compile-time-unrolled templates
         sm = int(sm)
         cc = cc + ((m & sm) == sm).astype(jnp.int32)
     out_ref[...] = cc
 
 
-def cc_pallas(masks2d: jax.Array, *, interpret: bool = False) -> jax.Array:
+def cc_pallas(masks2d: jax.Array, *, model: DeviceModel = A100_40GB,
+              interpret: bool = False) -> jax.Array:
     """masks2d: (R, 128) int32, R % BLOCK_ROWS == 0. Returns (R, 128) int32."""
     rows, lanes = masks2d.shape
     assert lanes == LANES and rows % BLOCK_ROWS == 0, (rows, lanes)
     grid = (rows // BLOCK_ROWS,)
     return pl.pallas_call(
-        _cc_kernel,
+        functools.partial(_cc_kernel, model.slot_masks),
         grid=grid,
         in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),

@@ -1,55 +1,59 @@
 """Pallas TPU kernel: batched fragmentation scoring (Algorithm 4).
 
-The greedy per-profile packing is a fixed 18-step sequence, so the whole
-Fragmentation() function unrolls into straight-line VPU code over the mask
-tile: per profile, (a) popcount gate, (b) masked take of each legal slot,
-(c) accumulate residue/size.  The sequential data dependence lives in
-registers (the ``free`` value), not memory, so the tile still streams.
+The greedy per-profile packing is a fixed slot sequence (18 steps on the
+A100-class models, 9 on the A30), so the whole Fragmentation() function
+unrolls into straight-line VPU code over the mask tile: per profile,
+(a) popcount gate, (b) masked take of each legal slot, (c) accumulate
+residue/size.  The sequential data dependence lives in registers (the
+``free`` value), not memory, so the tile still streams.  Templates are
+derived from the :class:`repro.core.mig.DeviceModel` at trace time — one
+kernel specialization per model.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.mig import PROFILES, SLOTS, SLOT_MASKS
+from ..core.mig import A100_40GB, DeviceModel
 
 BLOCK_ROWS = 64
 LANES = 128
 
-_PROFILE_SLOT_MASKS = tuple(
-    tuple(int(SLOT_MASKS[t]) for t, (p, _) in enumerate(SLOTS) if p is prof)
-    for prof in PROFILES)
-_PROFILE_SIZES = tuple(p.size for p in PROFILES)
 
-
-def _popcount8(x):
+def _popcount(x, num_bits):
     total = jnp.zeros_like(x)
-    for b in range(8):
+    for b in range(num_bits):
         total = total + ((x >> b) & 1)
     return total
 
 
-def _frag_kernel(mask_ref, out_ref):
+def _frag_kernel(model: DeviceModel, mask_ref, out_ref):
     free = mask_ref[...]
     frag = jnp.zeros(free.shape, jnp.float32)
-    for size, slot_masks in zip(_PROFILE_SIZES, _PROFILE_SLOT_MASKS):
-        applies = _popcount8(free) >= size
+    sizes = tuple(p.size for p in model.profiles)
+    for size, slot_masks in zip(sizes, model.profile_slot_masks):
+        applies = _popcount(free, model.num_blocks) >= size
         for sm in slot_masks:
             take = (free & sm) == sm
             free = jnp.where(take, free & ~sm, free)
         frag = frag + jnp.where(
-            applies, _popcount8(free).astype(jnp.float32) / size, 0.0)
+            applies,
+            _popcount(free, model.num_blocks).astype(jnp.float32) / size,
+            0.0)
     out_ref[...] = frag
 
 
-def frag_pallas(masks2d: jax.Array, *, interpret: bool = False) -> jax.Array:
+def frag_pallas(masks2d: jax.Array, *, model: DeviceModel = A100_40GB,
+                interpret: bool = False) -> jax.Array:
     """masks2d: (R, 128) int32 -> (R, 128) float32 fragmentation values."""
     rows, lanes = masks2d.shape
     assert lanes == LANES and rows % BLOCK_ROWS == 0, (rows, lanes)
     grid = (rows // BLOCK_ROWS,)
     return pl.pallas_call(
-        _frag_kernel,
+        functools.partial(_frag_kernel, model),
         grid=grid,
         in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),

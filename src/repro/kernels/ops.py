@@ -3,7 +3,10 @@
 Handles 1D->2D tiling (pad to a whole number of (BLOCK_ROWS, 128) tiles),
 kernel dispatch, and un-padding.  ``interpret`` defaults to True when no
 TPU is present so the same API runs everywhere; on TPU the compiled
-pallas_call path is used.
+pallas_call path is used.  ``model`` selects the device model whose slot
+templates the kernel bakes in (a static argument: one compiled
+specialization per model — :class:`repro.core.mig.DeviceModel` is
+hashable by value).
 """
 from __future__ import annotations
 
@@ -11,8 +14,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from ..core.mig import A100_40GB, DeviceModel
 from .cc_score import BLOCK_ROWS, LANES, cc_pallas
 from .frag_score import frag_pallas
 from .policy_score import ecc_score_pallas, mcc_score_pallas
@@ -36,42 +39,53 @@ def _from_tiles(out2d: jax.Array, n: int):
     return out2d.reshape(-1)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def cc_scores(masks: jax.Array, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("model", "interpret"))
+def cc_scores(masks: jax.Array, *, model: DeviceModel = A100_40GB,
+              interpret: bool | None = None):
     """Batched CC (Eq. 1) for (N,) uint8/int32 free masks -> (N,) int32."""
     interpret = _default_interpret() if interpret is None else interpret
     tiles, n = _to_tiles(masks)
-    return _from_tiles(cc_pallas(tiles, interpret=interpret), n)
+    return _from_tiles(cc_pallas(tiles, model=model, interpret=interpret),
+                       n)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def frag_scores(masks: jax.Array, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("model", "interpret"))
+def frag_scores(masks: jax.Array, *, model: DeviceModel = A100_40GB,
+                interpret: bool | None = None):
     """Batched Algorithm-4 fragmentation -> (N,) float32."""
     interpret = _default_interpret() if interpret is None else interpret
     tiles, n = _to_tiles(masks)
-    return _from_tiles(frag_pallas(tiles, interpret=interpret), n)
+    return _from_tiles(frag_pallas(tiles, model=model,
+                                   interpret=interpret), n)
 
 
-@functools.partial(jax.jit, static_argnames=("profile_idx", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("profile_idx", "model", "interpret"))
 def mcc_scores(masks: jax.Array, profile_idx: int, *,
+               model: DeviceModel = A100_40GB,
                interpret: bool | None = None):
     """Batched Algorithm-6 scores (post-assign CC; -1 = no fit)."""
     interpret = _default_interpret() if interpret is None else interpret
     tiles, n = _to_tiles(masks)
     return _from_tiles(
-        mcc_score_pallas(tiles, profile_idx, interpret=interpret), n)
+        mcc_score_pallas(tiles, profile_idx, model=model,
+                         interpret=interpret), n)
 
 
-@functools.partial(jax.jit, static_argnames=("profile_idx", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("profile_idx", "model", "interpret"))
 def ecc_scores(masks: jax.Array, profile_idx: int, probs: jax.Array, *,
+               model: DeviceModel = A100_40GB,
                interpret: bool | None = None):
-    """Batched Algorithm-7 scores. probs: (6,) f32 arrival probabilities."""
+    """Batched Algorithm-7 scores. probs: (num_profiles,) f32 arrival
+    probabilities."""
     interpret = _default_interpret() if interpret is None else interpret
     tiles, n = _to_tiles(masks)
-    probs_row = jnp.zeros((1, LANES), jnp.float32).at[0, :6].set(
+    np_ = model.num_profiles
+    probs_row = jnp.zeros((1, LANES), jnp.float32).at[0, :np_].set(
         probs.astype(jnp.float32))
     return _from_tiles(
-        ecc_score_pallas(tiles, profile_idx, probs_row,
+        ecc_score_pallas(tiles, profile_idx, probs_row, model=model,
                          interpret=interpret), n)
 
 

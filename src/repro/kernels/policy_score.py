@@ -7,9 +7,11 @@ start, then re-counts each profile's slots weighted by arrival
 probabilities.
 
 The requested profile index is a *compile-time* parameter (one kernel
-specialization per profile — there are only 6), so every slot template is
-again a constant and the body is straight-line VPU code.  Probabilities
-arrive as a (1, 128)-padded f32 row broadcast to every grid step.
+specialization per (model, profile) — at most 6 profiles per model), so
+every slot template is again a constant and the body is straight-line VPU
+code.  Templates come from the :class:`repro.core.mig.DeviceModel` slot
+enumeration.  Probabilities arrive as a (1, 128)-padded f32 row broadcast
+to every grid step.
 """
 from __future__ import annotations
 
@@ -19,62 +21,58 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.mig import PROFILES, SLOTS, SLOT_MASKS
+from ..core.mig import A100_40GB, DeviceModel
 
 BLOCK_ROWS = 64
 LANES = 128
 
-_PROFILE_SLOT_MASKS = tuple(
-    tuple(int(SLOT_MASKS[t]) for t, (p, _) in enumerate(SLOTS) if p is prof)
-    for prof in PROFILES)
-_ALL_SLOT_MASKS = tuple(int(m) for m in SLOT_MASKS)
-NUM_PROFILES = len(PROFILES)
 
-
-def _cc_of(m):
+def _cc_of(m, slot_masks):
     cc = jnp.zeros_like(m)
-    for sm in _ALL_SLOT_MASKS:
+    for sm in slot_masks:
         cc = cc + ((m & sm) == sm).astype(jnp.int32)
     return cc
 
 
-def _mcc_kernel(profile_idx: int, mask_ref, out_ref):
+def _mcc_kernel(model: DeviceModel, profile_idx: int, mask_ref, out_ref):
     m = mask_ref[...]
     best = jnp.full(m.shape, -1, jnp.int32)
-    for sm in _PROFILE_SLOT_MASKS[profile_idx]:
+    for sm in model.profile_slot_masks[profile_idx]:
         fits = (m & sm) == sm
-        cc_after = _cc_of(m & ~sm)
+        cc_after = _cc_of(m & ~sm, model.slot_masks)
         best = jnp.where(fits, jnp.maximum(best, cc_after), best)
     out_ref[...] = best
 
 
-def _ecc_kernel(profile_idx: int, mask_ref, probs_ref, out_ref):
+def _ecc_kernel(model: DeviceModel, profile_idx: int, mask_ref, probs_ref,
+                out_ref):
     m = mask_ref[...]
     best_cc = jnp.full(m.shape, -1, jnp.int32)
     best_after = m
-    for sm in _PROFILE_SLOT_MASKS[profile_idx]:
+    for sm in model.profile_slot_masks[profile_idx]:
         fits = (m & sm) == sm
         after = m & ~sm
-        cc_after = jnp.where(fits, _cc_of(after), -1)
+        cc_after = jnp.where(fits, _cc_of(after, model.slot_masks), -1)
         better = cc_after > best_cc          # first maximizer kept
         best_after = jnp.where(better, after, best_after)
         best_cc = jnp.maximum(best_cc, cc_after)
     ecc = jnp.zeros(m.shape, jnp.float32)
-    for pi in range(NUM_PROFILES):
+    for pi in range(model.num_profiles):
         count = jnp.zeros(m.shape, jnp.int32)
-        for sm in _PROFILE_SLOT_MASKS[pi]:
+        for sm in model.profile_slot_masks[pi]:
             count = count + ((best_after & sm) == sm).astype(jnp.int32)
         ecc = ecc + probs_ref[0, pi] * count.astype(jnp.float32)
     out_ref[...] = jnp.where(best_cc >= 0, ecc, -1.0)
 
 
 def mcc_score_pallas(masks2d: jax.Array, profile_idx: int, *,
+                     model: DeviceModel = A100_40GB,
                      interpret: bool = False) -> jax.Array:
     rows, lanes = masks2d.shape
     assert lanes == LANES and rows % BLOCK_ROWS == 0
     grid = (rows // BLOCK_ROWS,)
     return pl.pallas_call(
-        functools.partial(_mcc_kernel, profile_idx),
+        functools.partial(_mcc_kernel, model, profile_idx),
         grid=grid,
         in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),
@@ -85,14 +83,15 @@ def mcc_score_pallas(masks2d: jax.Array, profile_idx: int, *,
 
 def ecc_score_pallas(masks2d: jax.Array, profile_idx: int,
                      probs_row: jax.Array, *,
+                     model: DeviceModel = A100_40GB,
                      interpret: bool = False) -> jax.Array:
-    """probs_row: (1, 128) f32, first 6 lanes = profile probabilities."""
+    """probs_row: (1, 128) f32, first num_profiles lanes = probabilities."""
     rows, lanes = masks2d.shape
     assert lanes == LANES and rows % BLOCK_ROWS == 0
     assert probs_row.shape == (1, LANES)
     grid = (rows // BLOCK_ROWS,)
     return pl.pallas_call(
-        functools.partial(_ecc_kernel, profile_idx),
+        functools.partial(_ecc_kernel, model, profile_idx),
         grid=grid,
         in_specs=[
             pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),

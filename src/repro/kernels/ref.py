@@ -8,94 +8,95 @@ semantics the Pallas kernels implement:
   * ``frag_ref``     — fragmentation metric (Algorithm 4)
   * ``mcc_score_ref``— post-default-assign CC per GPU (Algorithm 6 inner loop)
   * ``ecc_score_ref``— expectation-weighted CC (Algorithm 7 inner loop)
+
+Every function takes a :class:`repro.core.mig.DeviceModel` (default: the
+paper's A100-40GB) and derives its slot templates from the model's slot
+enumeration — the same single source ``repro.core.tables`` materializes
+its arrays from, so there is exactly one definition of the slot metadata.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.mig import PROFILES, SLOTS, SLOT_MASKS
+from ..core.mig import A100_40GB, DeviceModel
 
-NUM_SLOTS = len(SLOTS)       # 18
-NUM_PROFILES = len(PROFILES)  # 6
-
-# Static template metadata (python ints — baked into traced code).
-_SLOT_MASKS = tuple(int(m) for m in SLOT_MASKS)
-_SLOT_PROFILE = tuple(PROFILES.index(p) for p, _ in SLOTS)
-_PROFILE_SIZES = tuple(p.size for p in PROFILES)
-# per profile: list of slot masks (its legal placements)
-_PROFILE_SLOT_MASKS = tuple(
-    tuple(int(_SLOT_MASKS[t]) for t in range(NUM_SLOTS)
-          if _SLOT_PROFILE[t] == pi)
-    for pi in range(NUM_PROFILES))
+NUM_SLOTS = A100_40GB.num_slots       # 18
+NUM_PROFILES = A100_40GB.num_profiles  # 6
 
 
-def _popcount8(x: jnp.ndarray) -> jnp.ndarray:
-    """Population count of the low 8 bits."""
+def _popcount(x: jnp.ndarray, num_bits: int) -> jnp.ndarray:
+    """Population count of the low ``num_bits`` bits."""
     x = x.astype(jnp.int32)
     total = jnp.zeros_like(x)
-    for b in range(8):
+    for b in range(num_bits):
         total = total + ((x >> b) & 1)
     return total
 
 
-def cc_ref(masks: jnp.ndarray) -> jnp.ndarray:
+def cc_ref(masks: jnp.ndarray,
+           model: DeviceModel = A100_40GB) -> jnp.ndarray:
     """CC(G) = number of (profile, start) slots placeable in free mask G."""
     m = masks.astype(jnp.int32)
     cc = jnp.zeros_like(m)
-    for sm in _SLOT_MASKS:
+    for sm in model.slot_masks:    # compile-time-unrolled templates
+        sm = int(sm)
         cc = cc + ((m & sm) == sm).astype(jnp.int32)
     return cc
 
 
-def frag_ref(masks: jnp.ndarray) -> jnp.ndarray:
+def frag_ref(masks: jnp.ndarray,
+             model: DeviceModel = A100_40GB) -> jnp.ndarray:
     """Algorithm 4's Fragmentation: greedily pack each profile in order
     (mutating the working copy across profiles); after each applicable
     profile add (remaining free blocks / profile size)."""
     free = masks.astype(jnp.int32)
     frag = jnp.zeros(free.shape, jnp.float32)
-    for pi in range(NUM_PROFILES):
-        size = _PROFILE_SIZES[pi]
-        applies = _popcount8(free) >= size
-        for sm in _PROFILE_SLOT_MASKS[pi]:
+    for pi, p in enumerate(model.profiles):
+        applies = _popcount(free, model.num_blocks) >= p.size
+        for sm in model.profile_slot_masks[pi]:
             take = (free & sm) == sm
             free = jnp.where(take, free & ~sm, free)
         frag = frag + jnp.where(
-            applies, _popcount8(free).astype(jnp.float32) / size, 0.0)
+            applies,
+            _popcount(free, model.num_blocks).astype(jnp.float32) / p.size,
+            0.0)
     return frag
 
 
-def mcc_score_ref(masks: jnp.ndarray, profile_idx: int) -> jnp.ndarray:
+def mcc_score_ref(masks: jnp.ndarray, profile_idx: int,
+                  model: DeviceModel = A100_40GB) -> jnp.ndarray:
     """Best post-assignment CC over the profile's legal starts (the default
     policy chooses exactly this maximum), -1 where the profile can't fit."""
     m = masks.astype(jnp.int32)
     best = jnp.full(m.shape, -1, jnp.int32)
-    for sm in _PROFILE_SLOT_MASKS[profile_idx]:
+    for sm in model.profile_slot_masks[profile_idx]:
         fits = (m & sm) == sm
-        cc_after = cc_ref(m & ~sm)
+        cc_after = cc_ref(m & ~sm, model)
         best = jnp.where(fits, jnp.maximum(best, cc_after), best)
     return best
 
 
 def ecc_score_ref(masks: jnp.ndarray, profile_idx: int,
-                  probs: jnp.ndarray) -> jnp.ndarray:
+                  probs: jnp.ndarray,
+                  model: DeviceModel = A100_40GB) -> jnp.ndarray:
     """ECC after placing ``profile_idx`` with the default policy:
     sum_p P(p) * |S(G_after, p)| at the CC-maximizing (first-max) start;
     -1.0 where the profile can't fit."""
     m = masks.astype(jnp.int32)
     best_cc = jnp.full(m.shape, -1, jnp.int32)
     best_after = m  # placeholder; refined below
-    for sm in _PROFILE_SLOT_MASKS[profile_idx]:
+    for sm in model.profile_slot_masks[profile_idx]:
         fits = (m & sm) == sm
         after = m & ~sm
-        cc_after = jnp.where(fits, cc_ref(after), -1)
+        cc_after = jnp.where(fits, cc_ref(after, model), -1)
         better = cc_after > best_cc   # strict: keeps FIRST maximizer
         best_after = jnp.where(better, after, best_after)
         best_cc = jnp.maximum(best_cc, cc_after)
     ecc = jnp.zeros(m.shape, jnp.float32)
-    for pi in range(NUM_PROFILES):
+    for pi in range(model.num_profiles):
         count = jnp.zeros(m.shape, jnp.int32)
-        for sm in _PROFILE_SLOT_MASKS[pi]:
+        for sm in model.profile_slot_masks[pi]:
             count = count + ((best_after & sm) == sm).astype(jnp.int32)
         ecc = ecc + probs[pi] * count.astype(jnp.float32)
     return jnp.where(best_cc >= 0, ecc, -1.0)

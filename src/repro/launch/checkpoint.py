@@ -33,7 +33,9 @@ _VIEW_DTYPES = {"bfloat16": np.uint16}
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists from jax 0.4.34+ under that
+    # name on some release lines; tree_util's spelling works everywhere.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]

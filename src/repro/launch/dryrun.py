@@ -97,6 +97,15 @@ HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link (~per chip, one direction)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` as a dict across jax versions (older
+    releases return a one-element list of per-partition dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
                    chips: int) -> Dict[str, float]:
     compute_s = flops / (chips * PEAK_FLOPS)
@@ -227,7 +236,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = {k: v * chips for k, v in collective_bytes(hlo).items()}
     coll_total = sum(coll.values())

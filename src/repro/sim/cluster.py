@@ -4,20 +4,34 @@ Mirrors the two-level placement split of §8: an upper level chooses the
 host/GPU traversal order (the policies), while the lower level — block
 placement inside a GPU — is always NVIDIA's fixed default policy
 (``repro.core.mig.GPU.assign``).
+
+Fleets may be heterogeneous: every GPU carries a
+:class:`repro.core.mig.DeviceModel`, the cluster exposes the fleet's model
+list plus a per-GPU ``gpu_model_id`` index, and a VM request resolves to a
+per-model profile (``VM.profile_ids`` / ``Cluster.vm_pids``) so the same
+VM can land on any model in the fleet.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from ..core.mig import GPU, Profile
+from ..core.mig import (DEFAULT_MODEL, GPU, DeviceModel, Profile, get_model)
 
 
 @dataclasses.dataclass
 class VM:
-    """A MIG-enabled VM request (a 'pod' in the Alibaba trace mapping)."""
+    """A MIG-enabled VM request (a 'pod' in the Alibaba trace mapping).
+
+    ``profile`` is the request's profile under the cluster's *reference*
+    model (``cluster.models[0]``); for heterogeneous fleets,
+    ``profile_ids`` carries the Eq. 27-30 mapping of the same GPU
+    requirement onto every fleet model (aligned with ``cluster.models``)
+    and is required — on single-model clusters it may stay ``None`` (the
+    profile resolves by name against the one model).
+    """
     vm_id: int
     profile: Profile
     arrival: float          # hours
@@ -25,6 +39,7 @@ class VM:
     cpu: float = 1.0
     ram: float = 1.0
     weight: float = 1.0     # a_i in Eq. (3)
+    profile_ids: Optional[Tuple[int, ...]] = None
 
     @property
     def departure(self) -> float:
@@ -56,7 +71,8 @@ class Host:
 class Cluster:
     """Data-center state + placement bookkeeping."""
 
-    def __init__(self, hosts: List[Host]):
+    def __init__(self, hosts: List[Host],
+                 models: Optional[Sequence[DeviceModel]] = None):
         self.hosts = hosts
         for pos, h in enumerate(hosts):
             if h.host_id != pos:
@@ -70,11 +86,34 @@ class Cluster:
                 g.global_index = idx
                 self.gpu_index[idx] = (h, g)
                 idx += 1
+        # Fleet model list: explicit, or derived in first-appearance order.
+        if models is None:
+            seen: List[DeviceModel] = []
+            for i in range(idx):
+                m = self.gpu_index[i][1].model
+                if m not in seen:
+                    seen.append(m)
+            models = tuple(seen) or (DEFAULT_MODEL,)
+        self.models: Tuple[DeviceModel, ...] = tuple(models)
+        # Index by model *value* (DeviceModel hashes by its fields), so a
+        # custom model reusing a preset's name cannot silently resolve to
+        # the wrong fleet slot.
+        mindex = {m: i for i, m in enumerate(self.models)}
+        try:
+            self.gpu_model_id = np.array(
+                [mindex[self.gpu_index[i][1].model]
+                 for i in range(idx)], dtype=np.int32)
+        except KeyError:
+            raise ValueError(
+                "a GPU's device model is not in the cluster's model list "
+                f"{[m.name for m in self.models]}") from None
         self.placements: Dict[int, Tuple[Host, GPU]] = {}  # vm_id -> loc
         self.vms: Dict[int, VM] = {}
         # Vectorized mirror of per-GPU free-block masks (kept in sync by
         # every mutation below); policies scan this instead of objects.
-        self.free_masks = np.full(len(self.gpu_index), 255, dtype=np.uint8)
+        self.free_masks = np.array(
+            [self.gpu_index[i][1].model.full_mask for i in range(idx)],
+            dtype=np.uint8)
         # Vectorized host headroom, indexed by gpu global_index's host.
         self.gpu_host_id = np.array(
             [self.gpu_index[i][0].host_id for i in range(len(self.gpu_index))],
@@ -125,6 +164,35 @@ class Cluster:
                  <= self.host_ram_cap))
         return ok[self.gpu_host_id]
 
+    # -- per-model request resolution -------------------------------------
+    def vm_pids(self, vm: VM) -> np.ndarray:
+        """The request's profile index on every fleet model, (M,) int32.
+
+        Multi-model fleets require explicit ``profile_ids``: a profile
+        *name* does not identify a geometry across models (the same name
+        can mean a different block footprint), so there is no safe
+        name-based fallback — the Eq. 27-30 mapping in
+        ``workload.alibaba`` is the way to produce the vector."""
+        if vm.profile_ids is not None:
+            if len(vm.profile_ids) != len(self.models):
+                raise ValueError(
+                    f"vm {vm.vm_id}: profile_ids has {len(vm.profile_ids)} "
+                    f"entries for a {len(self.models)}-model fleet")
+            return np.asarray(vm.profile_ids, dtype=np.int32)
+        if len(self.models) != 1:
+            raise ValueError(
+                f"vm {vm.vm_id} has no profile_ids on a "
+                f"{len(self.models)}-model fleet; map its GPU requirement "
+                "onto every model (Eq. 27-30, see workload.alibaba."
+                "map_gpu_requirement_to_profile)")
+        return np.array([self.models[0].profile_index[vm.profile.name]],
+                        dtype=np.int32)
+
+    def profile_on(self, vm: VM, gpu: GPU) -> Profile:
+        """The concrete Profile ``vm`` occupies on ``gpu``'s model."""
+        pid = int(self.vm_pids(vm)[self.gpu_model_id[gpu.global_index]])
+        return gpu.model.profiles[pid]
+
     # -- queries ----------------------------------------------------------
     @property
     def num_gpus(self) -> int:
@@ -154,7 +222,7 @@ class Cluster:
         host = self.host_of_gpu(gpu)
         if not self._host_fits(host, vm):
             return None
-        start = gpu.assign(vm.vm_id, vm.profile)
+        start = gpu.assign(vm.vm_id, self.profile_on(vm, gpu))
         if start is None:
             return None
         self._host_charge(host, vm, +1)
@@ -165,7 +233,7 @@ class Cluster:
 
     def place_at(self, vm: VM, gpu: GPU, start: int) -> None:
         host = self.host_of_gpu(gpu)
-        gpu.assign_at(vm.vm_id, vm.profile, start)
+        gpu.assign_at(vm.vm_id, self.profile_on(vm, gpu), start)
         self._host_charge(host, vm, +1)
         self.placements[vm.vm_id] = (host, gpu)
         self.vms[vm.vm_id] = vm
@@ -183,7 +251,7 @@ class Cluster:
         host, gpu = self.placements[vm_id]
         vm = self.vms[vm_id]
         gpu.release(vm_id)
-        gpu.assign_at(vm_id, vm.profile, new_start)
+        gpu.assign_at(vm_id, self.profile_on(vm, gpu), new_start)
         self._sync(gpu)
 
     def migrate_inter(self, vm_id: int, dst: GPU) -> bool:
@@ -193,7 +261,7 @@ class Cluster:
         dst_host = self.host_of_gpu(dst)
         if dst_host is not src_host and not self._host_fits(dst_host, vm):
             return False
-        start = dst.assign(vm_id, vm.profile)
+        start = dst.assign(vm_id, self.profile_on(vm, dst))
         if start is None:
             return False
         src_gpu.release(vm_id)
@@ -206,13 +274,36 @@ class Cluster:
         return True
 
 
+ModelLike = Union[DeviceModel, str]
+
+
+def _resolve(model: ModelLike) -> DeviceModel:
+    return get_model(model) if isinstance(model, str) else model
+
+
 def make_cluster(gpu_counts: List[int], cpu: float = 128.0,
-                 ram: float = 1024.0) -> Cluster:
-    """Build a cluster from a per-host GPU-count list."""
+                 ram: float = 1024.0,
+                 host_models: Optional[Sequence[ModelLike]] = None,
+                 models: Optional[Sequence[DeviceModel]] = None) -> Cluster:
+    """Build a cluster from a per-host GPU-count list.
+
+    ``host_models`` optionally assigns a device model per host (names or
+    ``DeviceModel`` instances); default is the paper's homogeneous
+    A100-40GB fleet.  ``models`` pins the fleet's model ordering (the
+    first entry is the reference model for VM profiles/metrics); by
+    default it is derived in first-appearance order.
+    """
+    if host_models is not None and len(host_models) != len(gpu_counts):
+        raise ValueError("host_models must match gpu_counts length")
     hosts = []
     for hid, n in enumerate(gpu_counts):
-        hosts.append(Host(hid, [GPU() for _ in range(n)], cpu, ram))
-    return Cluster(hosts)
+        model = (_resolve(host_models[hid]) if host_models is not None
+                 else DEFAULT_MODEL)
+        hosts.append(Host(hid, [GPU(model=model) for _ in range(n)],
+                          cpu, ram))
+    if models is not None:
+        models = tuple(_resolve(m) for m in models)
+    return Cluster(hosts, models=models)
 
 
 __all__ = ["VM", "Host", "Cluster", "make_cluster"]

@@ -19,7 +19,13 @@ def simulate(cluster: Cluster, policy: PlacementPolicy, vms: List[VM],
              step_hours: float = 1.0,
              horizon: Optional[float] = None,
              progress: Optional[Callable[[float], None]] = None) -> SimResult:
-    res = SimResult(policy=policy.name)
+    # Per-profile tallies are keyed by the fleet's *reference* model
+    # (cluster.models[0]) — the model VM.profile is expressed in.
+    res = SimResult(
+        policy=policy.name,
+        per_profile_total={p.name: 0 for p in cluster.models[0].profiles},
+        per_profile_accepted={p.name: 0
+                              for p in cluster.models[0].profiles})
     arrivals = sorted(vms, key=lambda v: (v.arrival, v.vm_id))
     if horizon is None:
         horizon = max((v.arrival for v in arrivals), default=0.0) + step_hours

@@ -1,0 +1,305 @@
+"""The device-model layer: presets, per-model tables, fleet Tables
+padding, model-derived kernel templates, and model-aware policy core."""
+import numpy as np
+import pytest
+
+from repro.core import policy_core as pc
+from repro.core.mig import (A30_24GB, A100_40GB, A100_80GB, DEVICE_MODELS,
+                            H100_80GB, GPU, blocks_of, fragmentation,
+                            get_cc, get_model, gpu_from_free_mask)
+from repro.core.tables import tables_for_model
+
+jnp = pytest.importorskip("jax.numpy")
+
+
+# ---------------------------------------------------------------------------
+# Presets and derived geometry
+# ---------------------------------------------------------------------------
+
+def test_device_model_rejects_more_than_8_blocks():
+    """Free masks travel as uint8; wider models must fail loudly."""
+    from repro.core.mig import DeviceModel, Profile
+    with pytest.raises(ValueError, match="num_blocks"):
+        DeviceModel("B200-TEST", 16, (Profile("16g", 16, 14, (0,)),))
+
+
+def test_preset_registry():
+    assert set(DEVICE_MODELS) == {"A30-24GB", "A100-40GB", "A100-80GB",
+                                  "H100-80GB"}
+    assert get_model("A30-24GB") is A30_24GB
+    with pytest.raises(KeyError):
+        get_model("V100-16GB")
+
+
+def test_a30_geometry():
+    m = A30_24GB
+    assert m.num_blocks == 4 and m.num_profiles == 4
+    assert m.num_slots == 4 + 2 + 2 + 1 == 9
+    assert m.num_masks == 16 and m.full_mask == 0xF
+    assert m.heavy_profile == m.profile_index["4g.24gb"] == 3
+    assert m.lower_half_free == 0x3 and m.upper_half_free == 0xC
+    # Half-GPU (2-block) profiles are the consolidatable ones.
+    assert m.consolidatable == (1, 2)
+
+
+def test_a100_40_derivations_match_paper_constants():
+    m = A100_40GB
+    assert m.num_slots == 18
+    assert m.heavy_profile == 5                       # 7g.40gb
+    assert m.lower_half_free == 0x0F
+    assert m.upper_half_free == 0xF0
+    assert m.consolidatable == (3, 4)                 # 3g/4g.20gb
+    # 80GB-class models share the A100 geometry under renamed profiles.
+    for big in (A100_80GB, H100_80GB):
+        assert big.num_slots == 18
+        assert [p.size for p in big.profiles] == [1, 2, 2, 4, 4, 8]
+        assert big.slot_masks == m.slot_masks
+
+
+def test_slot_metadata_single_source():
+    """core.tables slot arrays are derived from the DeviceModel slot
+    enumeration — the same source the kernel oracles consume."""
+    for m in DEVICE_MODELS.values():
+        t = tables_for_model(m)
+        np.testing.assert_array_equal(t.slot_mask_arr,
+                                      np.array(m.slot_masks))
+        np.testing.assert_array_equal(t.slot_profile,
+                                      np.array(m.slot_profile))
+        np.testing.assert_array_equal(t.slot_start,
+                                      np.array(m.slot_starts))
+        # Per-profile slot masks partition the slot list.
+        assert sum(len(s) for s in m.profile_slot_masks) == m.num_slots
+
+
+# ---------------------------------------------------------------------------
+# Per-model tables vs the object level (exhaustive per model)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(DEVICE_MODELS))
+def test_model_tables_match_object_level(name):
+    m = DEVICE_MODELS[name]
+    t = tables_for_model(m)
+    step = 7 if m.num_masks > 64 else 1    # sample the 256-mask models
+    for mask in range(0, m.num_masks, step):
+        gpu = gpu_from_free_mask(mask, model=m)
+        assert t.cc[mask] == get_cc(gpu.free, m.profiles)
+        assert t.frag[mask] == pytest.approx(fragmentation(gpu))
+        assert t.popcount[mask] == bin(mask).count("1")
+        for pi, p in enumerate(m.profiles):
+            fresh = gpu_from_free_mask(mask, model=m)
+            start = fresh.assign("vm", p)
+            if start is None:
+                assert t.assign_start[mask, pi] == -1
+                assert not t.fits[mask, pi]
+            else:
+                assert t.assign_start[mask, pi] == start
+                assert t.assign_mask[mask, pi] == fresh.free_mask()
+                assert t.cc_after[mask, pi] == fresh.cc()
+
+
+def test_a30_default_policy_example():
+    """On an empty A30 the first 1g.6gb lands on the highest
+    CC-preserving start (mirror of the §7.1 A100 example)."""
+    g = GPU(model=A30_24GB)
+    p = A30_24GB.profile_by_name["1g.6gb"]
+    first = g.assign("a", p)
+    second = g.assign("b", p)
+    assert first != second
+    assert {first, second} <= set(p.start_blocks)
+    # Both 2-block profiles must still fit after one 1g placement.
+    g2 = GPU(model=A30_24GB)
+    g2.assign("a", p)
+    assert g2.fits(A30_24GB.profile_by_name["2g.12gb"])
+
+
+# ---------------------------------------------------------------------------
+# Fleet Tables: padding + model-axis gathers
+# ---------------------------------------------------------------------------
+
+def test_fleet_tables_padding():
+    T = pc.tables_for(np, (A30_24GB, A100_40GB))
+    assert T.num_models == 2
+    assert T.num_masks == 256 and T.num_profiles == 6
+    assert T.max_blocks == 8
+    # A30 rows: profiles >= 4 and masks >= 16 are never feasible.
+    assert not T.fits[0, :, 4:].any()
+    assert not T.fits[0, 16:, :].any()
+    assert (T.assign_start[0, :, 4:] == -1).all()
+    # Model scalars.
+    assert T.full_mask.tolist() == [0xF, 0xFF]
+    assert T.heavy.tolist() == [3, 5]
+    assert T.lower_half.tolist() == [0x3, 0x0F]
+    assert T.consolidatable[0].tolist() == [False, True, True, False,
+                                            False, False]
+    assert T.consolidatable[1].tolist() == [False, False, False, True,
+                                            True, False]
+
+
+def test_heavy_request_classification():
+    models = (A30_24GB, A100_40GB)
+    assert pc.heavy_request(models, np.array([3, 5]))
+    assert not pc.heavy_request(models, np.array([3, 4]))
+    assert not pc.heavy_request(models, np.array([2, 5]))
+
+
+def test_select_gpu_on_mixed_fleet_backends_agree():
+    models = (A30_24GB, A100_40GB, H100_80GB)
+    TN = pc.tables_for(np, models)
+    TJ = pc.tables_for(jnp, models)
+    rng = np.random.default_rng(7)
+    G = 9
+    mid = rng.integers(0, 3, size=G).astype(np.int32)
+    caps = TN.full_mask[mid]
+    for policy in (pc.FF, pc.BF, pc.MCC, pc.MECC):
+        for _ in range(30):
+            free = (rng.integers(0, 256, size=G) & caps).astype(np.int32)
+            host_ok = rng.random(G) < 0.8
+            pids = np.array([rng.integers(0, 4), rng.integers(0, 6),
+                             rng.integers(0, 6)], np.int32)
+            w = (rng.integers(0, 40, size=(3, 6)) if policy == pc.MECC
+                 else None)
+            got_np = int(pc.select_gpu(policy, np, TN, mid, free, pids,
+                                       host_ok, w))
+            got_j = int(pc.select_gpu(
+                policy, jnp, TJ, jnp.asarray(mid), jnp.asarray(free),
+                jnp.asarray(pids), jnp.asarray(host_ok),
+                jnp.asarray(w.astype(np.int32)) if w is not None
+                else None))
+            assert got_np == got_j
+            if got_np >= 0:   # the pick is feasible on its own model
+                m = models[mid[got_np]]
+                t = tables_for_model(m)
+                assert t.fits[free[got_np], pids[mid[got_np]]]
+
+
+def test_repack_gpu_on_a30_matches_object_level():
+    models = (A30_24GB, A100_40GB)
+    T = pc.tables_for(np, models)
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        gpu = GPU(model=A30_24GB)
+        for vm in range(rng.integers(1, 4)):
+            gpu.assign(("vm", vm),
+                       A30_24GB.profiles[int(rng.integers(0, 4))])
+        prof_by_block = np.full(T.max_blocks, -1, np.int32)
+        for owner, (prof, start) in gpu.placements.items():
+            prof_by_block[start] = A30_24GB.profile_index[prof.name]
+        starts, ok, final_mask, moved = pc.repack_gpu(np, T, 0,
+                                                      prof_by_block)
+        mock = GPU(model=A30_24GB)
+        for b in range(A30_24GB.num_blocks):
+            if prof_by_block[b] < 0:
+                continue
+            ns = mock.assign(("m", b),
+                             A30_24GB.profiles[int(prof_by_block[b])])
+            assert ns is not None and int(starts[b]) == ns
+        assert bool(ok)
+        assert int(final_mask) == mock.free_mask()
+
+
+# ---------------------------------------------------------------------------
+# Kernels with non-default models (oracle + Pallas interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_kernels_model_param_a30():
+    from repro.kernels import ref
+    from repro.kernels.ops import cc_scores, frag_scores, mcc_scores
+    t = tables_for_model(A30_24GB)
+    masks = jnp.asarray(np.arange(16, dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.cc_ref(masks, A30_24GB)), t.cc)
+    np.testing.assert_allclose(
+        np.asarray(ref.frag_ref(masks, A30_24GB)), t.frag)
+    np.testing.assert_array_equal(
+        np.asarray(cc_scores(masks, model=A30_24GB)), t.cc)
+    np.testing.assert_allclose(
+        np.asarray(frag_scores(masks, model=A30_24GB)), t.frag)
+    for pi in range(A30_24GB.num_profiles):
+        np.testing.assert_array_equal(
+            np.asarray(mcc_scores(masks, pi, model=A30_24GB)),
+            t.cc_after[:, pi])
+        np.testing.assert_array_equal(
+            np.asarray(ref.mcc_score_ref(masks, pi, A30_24GB)),
+            t.cc_after[:, pi])
+
+
+def test_kernel_ecc_model_param_a30():
+    from repro.kernels import ref
+    from repro.kernels.ops import ecc_scores
+    t = tables_for_model(A30_24GB)
+    masks = jnp.asarray(np.arange(16, dtype=np.int32))
+    probs = jnp.asarray(np.array([0.4, 0.2, 0.2, 0.2], np.float32))
+    for pi in (0, 3):
+        want = np.where(t.fits[:, pi],
+                        t.counts_after[:, pi] @ np.asarray(probs), -1.0)
+        np.testing.assert_allclose(
+            np.asarray(ecc_scores(masks, pi, probs, model=A30_24GB)),
+            want, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(ref.ecc_score_ref(masks, pi, probs, A30_24GB)),
+            want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous cluster object level
+# ---------------------------------------------------------------------------
+
+def test_make_cluster_hetero_and_vm_resolution():
+    from repro.sim.cluster import VM, make_cluster
+    cluster = make_cluster([1, 2, 1],
+                           host_models=["A30-24GB", "A100-40GB",
+                                        "H100-80GB"])
+    assert [m.name for m in cluster.models] == ["A30-24GB", "A100-40GB",
+                                                "H100-80GB"]
+    assert cluster.gpu_model_id.tolist() == [0, 1, 1, 2]
+    assert cluster.free_masks.tolist() == [0xF, 0xFF, 0xFF, 0xFF]
+    # A request mapped per model: full GPU everywhere.
+    vm = VM(0, A30_24GB.profiles[3], arrival=0.0, duration=1.0,
+            profile_ids=(3, 5, 5))
+    np.testing.assert_array_equal(cluster.vm_pids(vm), [3, 5, 5])
+    a100_gpu = cluster.gpu_index[1][1]
+    assert cluster.profile_on(vm, a100_gpu).name == "7g.40gb"
+    start = cluster.place(vm, a100_gpu)
+    assert start == 0 and cluster.free_masks[1] == 0
+    cluster.release(0)
+    assert cluster.free_masks[1] == 0xFF
+
+
+def test_vm_pids_by_name_fallback_single_model():
+    from repro.sim.cluster import VM, make_cluster
+    cluster = make_cluster([1])
+    vm = VM(0, A100_40GB.profiles[2], arrival=0.0, duration=1.0)
+    np.testing.assert_array_equal(cluster.vm_pids(vm), [2])
+
+
+def test_vm_pids_requires_explicit_mapping_on_multi_model_fleet():
+    """Profile *names* don't identify geometry across models, so a VM on
+    a mixed fleet must carry the Eq. 27-30 per-model mapping."""
+    from repro.sim.cluster import VM, make_cluster
+    cluster = make_cluster([1, 1], host_models=["A30-24GB", "A100-40GB"])
+    vm = VM(0, A100_40GB.profiles[0], arrival=0.0, duration=1.0)
+    with pytest.raises(ValueError, match="profile_ids"):
+        cluster.vm_pids(vm)
+    vm_ok = VM(1, A100_40GB.profiles[0], arrival=0.0, duration=1.0,
+               profile_ids=(0, 0))
+    np.testing.assert_array_equal(cluster.vm_pids(vm_ok), [0, 0])
+
+
+def test_table_caches_key_by_model_value_not_name():
+    """A custom model reusing a preset's name must get its own tables."""
+    from repro.core.mig import DeviceModel, Profile
+    variant_a = DeviceModel("CUSTOM-TEST", 4, (
+        Profile("1g", 1, 1, (0, 1, 2, 3)),
+        Profile("4g", 4, 4, (0,)),
+    ))
+    variant_b = DeviceModel("CUSTOM-TEST", 4, (
+        Profile("1g", 1, 1, (0, 2)),          # different start blocks
+        Profile("4g", 4, 4, (0,)),
+    ))
+    ta, tb = tables_for_model(variant_a), tables_for_model(variant_b)
+    assert ta is not tb
+    assert ta.cc[0xF] == 4 + 1 and tb.cc[0xF] == 2 + 1
+    Ta = pc.tables_for(np, (variant_a,))
+    Tb = pc.tables_for(np, (variant_b,))
+    assert int(Ta.cc_after[0, 0xF, 1]) != int(Tb.cc_after[0, 0xF, 1]) or \
+        Ta is not Tb

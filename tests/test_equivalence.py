@@ -5,6 +5,8 @@ and all five policies (including full GRMU with defragmentation and
 periodic consolidation) — through both engines and asserts *identical*
 per-VM accept/reject decisions, migration counts, and hourly
 acceptance / active-hardware series (hence identical AUC integrals).
+Covers both the paper's homogeneous A100-40GB cluster and heterogeneous
+A30+A100+H100 fleets (per-model Eq. 27-30 profile mapping).
 """
 import numpy as np
 import pytest
@@ -12,12 +14,16 @@ import pytest
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import batched as B
 from repro.core.grmu import GRMU
-from repro.core.mig import PROFILES
+from repro.core.mig import DEVICE_MODELS, PROFILES
 from repro.core.policies import POLICY_REGISTRY
 from repro.sim.cluster import VM, make_cluster
 from repro.sim.engine import simulate
+from repro.workload.alibaba import (map_gpu_requirement_to_profile,
+                                    profile_u_hat)
 
 HORIZON = 72.0
+
+HETERO_MODELS = ("A30-24GB", "A100-40GB", "H100-80GB")
 
 
 def random_scenario(seed, n_vms=90, hosts=(2, 1, 4, 1, 2),
@@ -38,16 +44,46 @@ def random_scenario(seed, n_vms=90, hosts=(2, 1, 4, 1, 2),
     return cluster, vms
 
 
-def run_both(seed, policy_name, grmu_kw=None):
+def hetero_scenario(seed, n_vms=110, hosts=(2, 1, 4, 1, 2, 2),
+                    cpu=9.0, ram=48.0):
+    """Mixed A30+A100-40+H100 fleet under the same tight pressure.  VM
+    requests are raw GPU requirements pushed through the per-model
+    Eq. 27-30 mapping (``VM.profile_ids``), biased toward half-GPU
+    profiles so GRMU's defrag and consolidation paths fire."""
+    rng = np.random.default_rng(seed)
+    models = tuple(DEVICE_MODELS[n] for n in HETERO_MODELS)
+    host_models = [HETERO_MODELS[i % len(HETERO_MODELS)]
+                   for i in range(len(hosts))]
+    cluster = make_cluster(list(hosts), cpu=cpu, ram=ram,
+                           host_models=host_models, models=models)
+    base = profile_u_hat(DEVICE_MODELS["A100-40GB"])
+    tgt = rng.choice(6, size=n_vms, p=[.1, .1, .1, .3, .25, .15])
+    u = np.clip(base[tgt] * np.exp(rng.normal(0.0, 0.08, size=n_vms)),
+                1e-4, 1.0)
+    pids = np.stack([map_gpu_requirement_to_profile(u, u_max=1.0, model=m)
+                     for m in models], axis=1)
+    vms = []
+    for i in range(n_vms):
+        vms.append(VM(
+            i, models[0].profiles[int(pids[i, 0])],
+            arrival=float(rng.uniform(0, HORIZON * 0.8)),
+            duration=float(rng.choice([0.5, 2.0, 5.0, 17.0, 300.0])),
+            cpu=float(rng.choice([1.0, 2.0, 4.0, 7.5])),
+            ram=float(rng.choice([4.0, 16.0, 31.25])),
+            profile_ids=tuple(int(x) for x in pids[i])))
+    return cluster, vms
+
+
+def run_both(seed, policy_name, grmu_kw=None, scenario=random_scenario):
     grmu_kw = grmu_kw or {}
-    cluster, vms = random_scenario(seed)
+    cluster, vms = scenario(seed)
     if policy_name == "GRMU":
         pol = GRMU(cluster, heavy_capacity_frac=0.3, **grmu_kw)
     else:
         pol = POLICY_REGISTRY[policy_name](cluster)
     res = simulate(cluster, pol, vms)
 
-    cluster2, vms2 = random_scenario(seed)
+    cluster2, vms2 = scenario(seed)
     events = B.build_events(vms2, cluster2)
     pid = {"FF": B.FF, "BF": B.BF, "MCC": B.MCC, "MECC": B.MECC,
            "GRMU": B.GRMU}[policy_name]
@@ -133,3 +169,52 @@ def test_property_random_traces_equivalent(seed):
                          dict(defrag=True, consolidation_interval=6.0))
     assert bres.accepted_ids == res.accepted_ids
     assert bres.hourly_active_hw == res.hourly_active_hw
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous fleets (acceptance criterion: A30+A100+H100, all policies)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["FF", "BF", "MCC", "MECC"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_hetero_baselines_equivalent(policy, seed):
+    res, bres = run_both(seed, policy, scenario=hetero_scenario)
+    assert_equivalent(res, bres)
+    assert res.rejected > 0        # hetero pressure is real too
+
+
+@pytest.mark.parametrize("grmu_kw", [
+    dict(defrag=False, consolidation_interval=None),   # DB point
+    dict(defrag=True, consolidation_interval=6.0),
+    dict(defrag=True, defrag_trigger="any", consolidation_interval=12.0),
+])
+@pytest.mark.parametrize("seed", [0, 4])
+def test_hetero_grmu_equivalent_all_features(grmu_kw, seed):
+    res, bres = run_both(seed, "GRMU", grmu_kw,
+                         scenario=hetero_scenario)
+    assert_equivalent(res, bres)
+
+
+def test_hetero_grmu_migration_paths_are_exercised():
+    """Defrag (intra) and consolidation (inter) must actually fire on the
+    mixed fleet across the stress seeds, so the hetero equivalence isn't
+    vacuous for Algs. 4-5."""
+    total_intra = total_inter = 0
+    for seed in range(8):
+        res, bres = run_both(seed, "GRMU",
+                             dict(defrag=True, consolidation_interval=6.0),
+                             scenario=hetero_scenario)
+        assert_equivalent(res, bres)
+        total_intra += res.intra_migrations
+        total_inter += res.inter_migrations
+    assert total_intra > 0
+    assert total_inter > 0
+
+
+def test_hetero_reference_profiles_key_the_result():
+    """Per-profile tallies on a mixed fleet are keyed by the reference
+    model's (A30) profile names, identically in both engines."""
+    res, bres = run_both(1, "FF", scenario=hetero_scenario)
+    assert set(res.per_profile_total) == {
+        p.name for p in DEVICE_MODELS["A30-24GB"].profiles}
+    assert bres.per_profile_total == res.per_profile_total

@@ -1,15 +1,30 @@
 """The backend-agnostic policy core: numpy and jax.numpy agree, and the
-table-driven repack matches the object-level default policy."""
+table-driven repack matches the object-level default policy.
+
+The policy core is fleet-parameterized: every call takes the per-GPU
+model-id vector ``mid`` and per-model profile ids.  These tests run the
+single-model (A100-40GB) fleet — ``mid`` all zero, profile ids (1,) —
+which is the paper's configuration; heterogeneous fleets are covered by
+tests/test_device_models.py and tests/test_equivalence.py."""
 import numpy as np
 import pytest
 
 from repro.core import policy_core as pc
-from repro.core.mig import GPU, PROFILES, gpu_from_free_mask
+from repro.core.mig import GPU, PROFILES
 
 jnp = pytest.importorskip("jax.numpy")
 
 _TN = pc.tables_for(np)
 _TJ = pc.tables_for(jnp)
+
+
+def _mid(n, xp=np):
+    return xp.zeros(n, dtype=xp.int32)
+
+
+def _pid(p, xp=np):
+    """Single-model fleet: the request's per-model profile-id vector."""
+    return xp.asarray([p], dtype=xp.int32)
 
 
 def _random_state(rng, n_gpus=12):
@@ -24,10 +39,13 @@ def test_select_gpu_backends_agree(policy):
     for _ in range(50):
         free, host_ok = _random_state(rng)
         p = int(rng.integers(0, 6))
-        w = rng.integers(0, 40, size=6) if policy == pc.MECC else None
-        got_np = int(pc.select_gpu(policy, np, _TN, free, p, host_ok, w))
+        w = (rng.integers(0, 40, size=(1, 6)) if policy == pc.MECC
+             else None)
+        got_np = int(pc.select_gpu(policy, np, _TN, _mid(free.size), free,
+                                   _pid(p), host_ok, w))
         got_j = int(pc.select_gpu(
-            policy, jnp, _TJ, jnp.asarray(free.astype(np.int32)), p,
+            policy, jnp, _TJ, _mid(free.size, jnp),
+            jnp.asarray(free.astype(np.int32)), _pid(p, jnp),
             jnp.asarray(host_ok),
             jnp.asarray(w.astype(np.int32)) if w is not None else None))
         assert got_np == got_j
@@ -39,9 +57,12 @@ def test_grmu_select_backends_agree():
         free, host_ok = _random_state(rng)
         basket = rng.integers(0, 3, size=free.size).astype(np.int32)
         p = int(rng.integers(0, 6))
-        r_np = pc.grmu_select(np, _TN, free, p, host_ok, basket, 3, 5)
-        r_j = pc.grmu_select(jnp, _TJ, jnp.asarray(free.astype(np.int32)),
-                             p, jnp.asarray(host_ok),
+        heavy = p == pc.HEAVY_PROFILE
+        r_np = pc.grmu_select(np, _TN, _mid(free.size), free, _pid(p),
+                              heavy, host_ok, basket, 3, 5)
+        r_j = pc.grmu_select(jnp, _TJ, _mid(free.size, jnp),
+                             jnp.asarray(free.astype(np.int32)),
+                             _pid(p, jnp), heavy, jnp.asarray(host_ok),
                              jnp.asarray(basket), 3, 5)
         assert tuple(int(x) for x in r_np) == tuple(int(x) for x in r_j)
 
@@ -51,11 +72,13 @@ def test_grmu_select_caps_are_strict():
     free = np.full(4, 0, dtype=np.uint8)       # all full
     host_ok = np.ones(4, dtype=bool)
     basket = np.array([2, 2, 0, 0], np.int32)  # light at cap 2
-    pick, grew, _ = pc.grmu_select(np, _TN, free, 0, host_ok, basket,
-                                   heavy_cap=2, light_cap=2)
+    pick, grew, _ = pc.grmu_select(np, _TN, _mid(4), free, _pid(0), False,
+                                   host_ok, basket, heavy_cap=2,
+                                   light_cap=2)
     assert int(pick) == -1 and not bool(grew)
-    pick, grew, gidx = pc.grmu_select(np, _TN, free, 0, host_ok, basket,
-                                      heavy_cap=2, light_cap=3)
+    pick, grew, gidx = pc.grmu_select(np, _TN, _mid(4), free, _pid(0),
+                                      False, host_ok, basket, heavy_cap=2,
+                                      light_cap=3)
     assert bool(grew) and int(gidx) == 2 and int(pick) == 2
 
 
@@ -72,7 +95,7 @@ def test_repack_matches_object_level_default_policy():
         prof_by_block = np.full(8, -1, np.int32)
         for owner, (prof, start) in gpu.placements.items():
             prof_by_block[start] = PROFILES.index(prof)
-        starts, ok, final_mask, moved = pc.repack_gpu(np, _TN,
+        starts, ok, final_mask, moved = pc.repack_gpu(np, _TN, 0,
                                                       prof_by_block)
         # Object-level replay on a mock GPU, ascending current start.
         mock = GPU()
@@ -95,9 +118,15 @@ def test_repack_matches_object_level_default_policy():
 def test_defrag_target_skips_empty_and_nonpositive():
     free = np.array([255, 255, 255], np.uint8)   # all empty
     light = np.array([True, True, False])
-    assert int(pc.defrag_target(np, _TN, free, light)) == -1
+    assert int(pc.defrag_target(np, _TN, _mid(3), free, light)) == -1
     # No light GPUs at all.
-    assert int(pc.defrag_target(np, _TN, free, np.zeros(3, bool))) == -1
+    assert int(pc.defrag_target(np, _TN, _mid(3), free,
+                                np.zeros(3, bool))) == -1
+
+
+def _sole_pids(sole_p):
+    """(G,) own-model profiles -> (G, 1) per-model matrix (1-model fleet)."""
+    return np.asarray(sole_p, np.int32)[:, None]
 
 
 def test_consolidation_plan_pairs_in_index_order():
@@ -108,7 +137,7 @@ def test_consolidation_plan_pairs_in_index_order():
     sole_p = np.full(G, 3, np.int32)                 # 3g.20gb fits start 4
     zeros = np.zeros(G, np.float32)
     tgt, _, _ = pc.consolidation_plan(
-        np, _TN, free, cand, sole_p, zeros, zeros,
+        np, _TN, _mid(G), free, cand, _sole_pids(sole_p), zeros, zeros,
         np.zeros(G, np.int32), np.zeros(1, np.float32),
         np.zeros(1, np.float32), np.full(1, 100, np.float32),
         np.full(1, 100, np.float32))
@@ -123,7 +152,7 @@ def test_consolidation_plan_respects_profile_feasibility():
     sole_p = np.full(G, 4, np.int32)
     zeros = np.zeros(G, np.float32)
     tgt, _, _ = pc.consolidation_plan(
-        np, _TN, free, cand, sole_p, zeros, zeros,
+        np, _TN, _mid(G), free, cand, _sole_pids(sole_p), zeros, zeros,
         np.zeros(G, np.int32), np.zeros(1, np.float32),
         np.zeros(1, np.float32), np.full(1, 100, np.float32),
         np.full(1, 100, np.float32))
@@ -143,12 +172,12 @@ def test_consolidation_plan_respects_host_headroom():
     cpu_cap = np.array([8.0, 8.0], np.float32)
     big = np.full(2, 100.0, np.float32)
     tgt, cpu_out, _ = pc.consolidation_plan(
-        np, _TN, free, cand, sole_p, cpu, zeros, hosts,
-        cpu_used, np.zeros(2, np.float32), cpu_cap, big)
+        np, _TN, _mid(G), free, cand, _sole_pids(sole_p), cpu, zeros,
+        hosts, cpu_used, np.zeros(2, np.float32), cpu_cap, big)
     assert tgt.tolist() == [-1, -1]          # 7 + 4 > 8 on host 1
     cpu_used = np.array([4.0, 3.0], np.float32)
     tgt, cpu_out, _ = pc.consolidation_plan(
-        np, _TN, free, cand, sole_p, cpu, zeros, hosts,
-        cpu_used, np.zeros(2, np.float32), cpu_cap, big)
+        np, _TN, _mid(G), free, cand, _sole_pids(sole_p), cpu, zeros,
+        hosts, cpu_used, np.zeros(2, np.float32), cpu_cap, big)
     assert tgt.tolist() == [1, -1]
     assert cpu_out.tolist() == [0.0, 7.0]    # resources moved with the VM

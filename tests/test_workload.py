@@ -1,0 +1,144 @@
+"""The workload layer: Eq. 27-30 pod->profile mapping, the §8.1 IQR
+filter, and trace-generation determinism (homogeneous + mixed fleets)."""
+import numpy as np
+import pytest
+
+from repro.core.mig import A30_24GB, A100_40GB, H100_80GB
+from repro.workload.alibaba import (FLEET_PRESETS, TraceConfig, generate,
+                                    iqr_filter,
+                                    map_gpu_requirement_to_profile,
+                                    profile_u_hat)
+
+
+# ---------------------------------------------------------------------------
+# Eqs. 27-30
+# ---------------------------------------------------------------------------
+
+def test_profile_u_hat_a100_values():
+    """Eq. 28-29 on the A100-40GB: Û_k = (c_k/7)(g_k/8) normalized by the
+    7g.40gb's U = 1."""
+    u_hat = profile_u_hat(A100_40GB)
+    want = np.array([(1 / 7) * (1 / 8), (1 / 7) * (2 / 8),
+                     (2 / 7) * (2 / 8), (3 / 7) * (4 / 8),
+                     (4 / 7) * (4 / 8), 1.0])
+    np.testing.assert_allclose(u_hat, want / want.max())
+    assert u_hat.max() == 1.0
+
+
+def test_mapping_exact_profile_values_are_identity():
+    """A requirement equal to a profile's Û maps back to that profile."""
+    for model in (A100_40GB, A30_24GB, H100_80GB):
+        u_hat = profile_u_hat(model)
+        got = map_gpu_requirement_to_profile(u_hat, u_max=1.0, model=model)
+        np.testing.assert_array_equal(got, np.arange(model.num_profiles))
+
+
+def test_mapping_explicit_u_max_vs_batch_max():
+    """Eq. 27's normalizer changes the mapping: with u_max=1.0 a batch of
+    small requirements stays small; with the per-batch max (default) the
+    largest one is pulled to the full-GPU profile."""
+    u = np.array([0.5, 0.25, 0.125])
+    pinned = map_gpu_requirement_to_profile(u, u_max=1.0)
+    batch = map_gpu_requirement_to_profile(u)        # normalizes by 0.5
+    u_hat = profile_u_hat(A100_40GB)
+    np.testing.assert_array_equal(
+        pinned, [np.argmin(np.abs(u_hat - x)) for x in u])
+    np.testing.assert_array_equal(
+        batch, [np.argmin(np.abs(u_hat - x / 0.5)) for x in u])
+    assert batch[0] == 5                              # 1.0 -> 7g.40gb
+    assert pinned[0] != batch[0]
+
+
+def test_mapping_per_model_full_requirement_is_heavy_everywhere():
+    u = np.array([1.0])
+    assert int(map_gpu_requirement_to_profile(
+        u, u_max=1.0, model=A100_40GB)[0]) == A100_40GB.heavy_profile
+    assert int(map_gpu_requirement_to_profile(
+        u, u_max=1.0, model=A30_24GB)[0]) == A30_24GB.heavy_profile
+    assert int(map_gpu_requirement_to_profile(
+        u, u_max=1.0, model=H100_80GB)[0]) == H100_80GB.heavy_profile
+
+
+# ---------------------------------------------------------------------------
+# IQR filter
+# ---------------------------------------------------------------------------
+
+def test_iqr_filter_bounds():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(10.0, 1.0, size=500)
+    vals[:5] = 1e6                                  # gross outliers
+    vals[5:8] = -1e6
+    kept = iqr_filter(vals)
+    q1, q3 = np.percentile(vals, [25, 75])
+    iqr = q3 - q1
+    lo, hi = q1 - 1.5 * iqr, q3 + 1.5 * iqr
+    assert kept.min() >= lo and kept.max() <= hi
+    assert 1e6 not in kept and -1e6 not in kept
+    # Inliers survive: the filter removes at most the planted outliers
+    # plus a small tail.
+    assert kept.size >= 480
+
+
+def test_iqr_filter_is_noop_on_uniformly_spread_data():
+    vals = np.linspace(0.0, 1.0, 101)
+    np.testing.assert_array_equal(iqr_filter(vals), vals)
+
+
+# ---------------------------------------------------------------------------
+# Trace generation determinism
+# ---------------------------------------------------------------------------
+
+def _trace_fingerprint(vms):
+    return [(v.vm_id, v.profile.name, v.arrival, v.duration, v.cpu, v.ram,
+             v.profile_ids) for v in vms]
+
+
+def test_generate_deterministic_under_fixed_seed():
+    cfg = TraceConfig(scale=0.02, seed=42)
+    c1, v1 = generate(cfg)
+    c2, v2 = generate(cfg)
+    assert _trace_fingerprint(v1) == _trace_fingerprint(v2)
+    assert [len(h.gpus) for h in c1.hosts] == [len(h.gpus)
+                                               for h in c2.hosts]
+    # Different seed -> different trace.
+    _, v3 = generate(TraceConfig(scale=0.02, seed=43))
+    assert _trace_fingerprint(v1) != _trace_fingerprint(v3)
+
+
+def test_generate_fleet_deterministic_and_vm_stream_fleet_invariant():
+    """Host models are drawn from a separate RNG stream: the same seed
+    yields the identical VM requirement stream across fleet mixes."""
+    cfg_hom = TraceConfig(scale=0.02, seed=9)
+    cfg_het = TraceConfig(scale=0.02, seed=9,
+                          fleet=FLEET_PRESETS["a30_a100_h100"])
+    _, v_hom = generate(cfg_hom)
+    c1, v_het1 = generate(cfg_het)
+    c2, v_het2 = generate(cfg_het)
+    assert _trace_fingerprint(v_het1) == _trace_fingerprint(v_het2)
+    assert c1.gpu_model_id.tolist() == c2.gpu_model_id.tolist()
+    # Same arrival/duration stream as the homogeneous trace.
+    assert [v.arrival for v in v_het1] == [v.arrival for v in v_hom]
+    assert [v.duration for v in v_het1] == [v.duration for v in v_hom]
+    # Mixed fleet actually materialized, with per-model profile ids.
+    assert len(set(c1.gpu_model_id.tolist())) > 1
+    assert all(v.profile_ids is not None
+               and len(v.profile_ids) == len(c1.models) for v in v_het1)
+
+
+def test_generate_fleet_profiles_consistent_with_mapping():
+    cfg = TraceConfig(scale=0.02, seed=5,
+                      fleet=FLEET_PRESETS["a30_a100"])
+    cluster, vms = generate(cfg)
+    ref = cluster.models[0]
+    for v in vms[:50]:
+        # VM.profile is the reference-model profile of profile_ids[0].
+        assert v.profile.name == ref.profiles[v.profile_ids[0]].name
+        # Every per-model id is a valid profile index on that model.
+        for pid, m in zip(v.profile_ids, cluster.models):
+            assert 0 <= pid < m.num_profiles
+
+
+def test_generate_homogeneous_profile_ids_default_none():
+    _, vms = generate(TraceConfig(scale=0.02, seed=1))
+    assert all(v.profile_ids is None for v in vms)
+    assert all(v.profile.name in A100_40GB.profile_index for v in vms)
