@@ -7,7 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
 Modules: config_space (§5.1), basket_sweep (Fig. 6-8),
 consolidation_sweep (Fig. 9), acceptance (Fig. 10-11),
 active_hardware (Fig. 12 / Table 6), migrations (§8.3.3),
-ilp_gap (§6 oracle), adaptive (online basket-capacity control),
+ilp_gap (§6 oracle vs all policies, homogeneous + mixed fleets),
+adaptive (online basket-capacity control),
 kernel_throughput + batched_engine + hetero_sweep (beyond-paper).
 The roofline table is produced separately by repro.launch.roofline
 (needs a fresh process for the 512-device XLA flag).

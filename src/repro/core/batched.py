@@ -547,10 +547,8 @@ def result_from_arrays(events: EventTrace, policy: int, out: dict
     ref_profiles = events.models[0].profiles
     accepted = np.asarray(out["accepted"], np.int64)
     total = np.asarray(out["total"], np.int64)
-    res = SimResult(
-        policy=pc.POLICY_NAMES.get(policy, str(policy)),
-        per_profile_total={p.name: 0 for p in ref_profiles},
-        per_profile_accepted={p.name: 0 for p in ref_profiles})
+    res = SimResult.for_model(
+        pc.POLICY_NAMES.get(policy, str(policy)), events.models[0])
     res.total_requests = int(total.sum())
     res.accepted = int(accepted.sum())
     res.rejected = res.total_requests - res.accepted

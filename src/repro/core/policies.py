@@ -1,12 +1,17 @@
-"""Baseline VM placement policies: FF, BF, MCC, MECC (paper §8.3, Algs. 6-7).
+"""Baseline VM placement policies: FF, BF, MCC, MECC (paper §8.3, Algs. 6-7)
+plus the rolling-horizon ILP oracle policy (§6 as an online scheduler).
 
-Every policy operates at the upper placement level (host/GPU traversal);
-the block-level placement inside a chosen GPU is always NVIDIA's default
-CC-maximizing policy (Algorithm 1), which cannot be overridden.
+Every heuristic operates at the upper placement level (host/GPU
+traversal); the block-level placement inside a chosen GPU is always
+NVIDIA's default CC-maximizing policy (Algorithm 1), which cannot be
+overridden.  :class:`ILPPolicy` is the exception: it re-solves the
+paper's exact model over a bounded window of recent residents at every
+decision point, so it may place at — and migrate residents to — any
+legal start block.
 
-The classes here are thin *drivers*: scan feasibility, scoring and pick
-semantics live in ``repro.core.policy_core`` (shared verbatim with the
-batched JAX engine); this module only adapts them to the object-level
+The heuristic classes are thin *drivers*: scan feasibility, scoring and
+pick semantics live in ``repro.core.policy_core`` (shared verbatim with
+the batched JAX engine); this module only adapts them to the object-level
 ``Cluster`` and keeps MECC's arrival history.  Each driver binds the
 policy core's :class:`~repro.core.policy_core.Tables` for its cluster's
 fleet (one model axis per device model), so the same classes serve
@@ -15,7 +20,7 @@ homogeneous and heterogeneous clusters.
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -129,6 +134,135 @@ class MaxECC(PlacementPolicy):
         return pc.mecc_weights(np, self._counts)
 
 
+class ILPPolicy(PlacementPolicy):
+    """Rolling-horizon oracle: re-solve the §6 ILP at every decision point.
+
+    Both Turkkan et al.'s optimal MIG placement and the FBK online
+    fragmentation-aware scheduler use an exact solver as a rolling-horizon
+    baseline; this is that sixth policy.  On each arrival the policy
+    builds a :class:`~repro.core.ilp.MigILP` mirroring the live cluster
+    (per-GPU device models included) and re-solves a *bounded window*:
+
+    * the newest ``window`` residents are movable (``delta = 1`` — their
+      PM/GPU reassignments are charged as Eq. 5 migrations and applied to
+      the cluster as real migrations);
+    * every older resident is *frozen* at its current placement (its
+      blocks stay put; it still occupies host CPU/RAM in Eqs. 6-7);
+    * residents are ``must_place`` — the solver may never evict a running
+      VM to admit a new one;
+    * the arriving VM has ``delta = 0`` (per the paper) and is accepted
+      iff the solved window places it.
+
+    The window bounds the MILP to O(window) movable variables per solve,
+    which is what makes the oracle runnable inside ``sim/engine.py``'s
+    step loop; migrations/intra/inter counters follow the same accounting
+    as GRMU, so ``SimResult`` rows are directly comparable.  If the
+    solver fails (time limit, infeasible) the cluster is left untouched
+    and the arrival is rejected.
+    """
+    name = "ILP"
+
+    def __init__(self, cluster: Cluster, window: int = 8,
+                 time_limit: float = 5.0, w_mig: float = 1e2,
+                 mip_rel_gap: float = 1e-9,
+                 allow_migration: bool = True):
+        # mip_rel_gap stays tight by default: the gap's absolute slack
+        # (gap * objective) must stay below MigILP.W_Z or the solver may
+        # legally stop at an incumbent that shuffles resident blocks,
+        # which this policy would then apply and count as migrations.
+        # Policy solves are small (stage 1 fully pinned, stage 2 bounded
+        # by `window`), so the tight proof is cheap here.
+        super().__init__(cluster)
+        from .ilp import MigILP  # deferred: keeps scipy optional here
+        self._MigILP = MigILP
+        self.window = int(window)
+        self.time_limit = float(time_limit)
+        self.w_mig = float(w_mig)
+        self.mip_rel_gap = float(mip_rel_gap)
+        self.allow_migration = allow_migration
+        self.solves = 0
+        # Residents in acceptance order (recency defines the window) and
+        # (host, gpu-slot) coordinates per GPU global index.
+        self._order: List[int] = []
+        self._loc: Dict[int, Tuple[int, int]] = {}
+        for h in cluster.hosts:
+            for k, g in enumerate(h.gpus):
+                self._loc[g.global_index] = (h.host_id, k)
+
+    def _current_assignment(self, vm_id: int) -> Tuple[int, int, int]:
+        host, gpu = self.cluster.placements[vm_id]
+        _, start = gpu.placements[vm_id]
+        j, k = self._loc[gpu.global_index]
+        return j, k, int(start)
+
+    def _solve(self, vm: VM, residents: List[int], movable: frozenset,
+               prev: Dict[int, Tuple[int, int, int]]):
+        ilp = self._MigILP.from_cluster(self.cluster, w_mig=self.w_mig)
+        for vid in residents:
+            ilp.add_vm(self.cluster.vms[vid], resident_at=prev[vid],
+                       delta=1.0, frozen=vid not in movable,
+                       must_place=True)
+        ilp.add_vm(vm)
+        self.solves += 1
+        res = ilp.solve(time_limit=self.time_limit,
+                        mip_rel_gap=self.mip_rel_gap)
+        # A time-limited incumbent (feasible but unproven) is still a
+        # legal layout — the policy applies it; only a solve with no
+        # integral solution at all rejects the arrival.
+        if (not res.feasible or vm.vm_id not in res.accepted
+                or any(vid not in res.accepted for vid in residents)):
+            return None  # rejected / solver failure: leave state alone
+        return res
+
+    def place(self, vm: VM) -> bool:
+        cl = self.cluster
+        residents = [vid for vid in self._order if vid in cl.placements]
+        prev = {vid: self._current_assignment(vid) for vid in residents}
+        # Stage 1: can the arrival be admitted with everything frozen?
+        # (Cheap — pinned variables presolve away — and keeps the solver
+        # from repacking residents gratuitously: z-moves are free in
+        # Eq. 5, so an unconstrained solve shuffles blocks arbitrarily.)
+        res = self._solve(vm, residents, frozenset(), prev)
+        if (res is None and self.allow_migration and residents
+                and self.window > 0):
+            # Stage 2: unlock the newest `window` residents and let the
+            # oracle migrate them to make room.  (The window>0 guard
+            # matters: residents[-0:] would unlock *everything*.)
+            res = self._solve(vm, residents,
+                              frozenset(residents[-self.window:]), prev)
+        if res is None:
+            return False
+        # Apply resident moves first (release-then-place avoids transient
+        # overlap: the solved layout is overlap-free, and unmoved blocks
+        # never collide with it).
+        moved = [(vid, cl.vms[vid]) for vid in residents
+                 if res.accepted[vid] != prev[vid]]
+        for vid, _ in moved:
+            cl.release(vid)  # pops cluster.vms[vid]; object kept above
+        for vid, mvm in moved:
+            j, k, z = res.accepted[vid]
+            cl.place_at(mvm, cl.hosts[j].gpus[k], z)
+            if (j, k) == prev[vid][:2]:
+                self.intra_migrations += 1
+            else:
+                self.inter_migrations += 1
+            self.migrations += 1
+        j, k, z = res.accepted[vm.vm_id]
+        cl.place_at(vm, cl.hosts[j].gpus[k], z)
+        self._order.append(vm.vm_id)
+        return True
+
+    def on_departure(self, vm: VM, now: float) -> None:
+        try:
+            self._order.remove(vm.vm_id)
+        except ValueError:
+            pass
+
+
+# The scalable §8.3 baselines: full-trace benchmarks iterate this dict,
+# so the rolling-horizon ILPPolicy (a per-arrival MILP — oracle-scale
+# instances only) is deliberately *not* registered here; import it
+# directly where the instance size warrants it (benchmarks/ilp_gap.py).
 POLICY_REGISTRY = {
     "FF": FirstFit,
     "BF": BestFit,
@@ -137,4 +271,4 @@ POLICY_REGISTRY = {
 }
 
 __all__ = ["PlacementPolicy", "FirstFit", "BestFit", "MaxCC", "MaxECC",
-           "POLICY_REGISTRY"]
+           "ILPPolicy", "POLICY_REGISTRY"]

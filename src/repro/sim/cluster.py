@@ -46,6 +46,48 @@ class VM:
         return self.arrival + self.duration
 
 
+def derive_fleet(models: Sequence[DeviceModel]) -> Tuple[DeviceModel, ...]:
+    """Fleet model list in first-appearance order (the ordering contract
+    ``VM.profile_ids`` vectors index into — single definition, shared by
+    ``Cluster`` and the ILP oracle layer).  Dedup is by model *value*
+    (``DeviceModel`` hashes by its fields), never by name."""
+    seen: List[DeviceModel] = []
+    for m in models:
+        if m not in seen:
+            seen.append(m)
+    return tuple(seen)
+
+
+def resolve_profile_ids(vm: "VM", models: Sequence[DeviceModel],
+                        missing_ok: bool = False) -> np.ndarray:
+    """The request's profile index on every fleet model, (M,) int32.
+
+    This is the single definition of the per-model resolution contract
+    (shared by the engines via ``Cluster.vm_pids`` and by the ILP oracle
+    layer): explicit ``profile_ids`` when present — required on
+    multi-model fleets, since a profile *name* does not identify a
+    geometry across models — else a name lookup against the one model.
+    ``missing_ok`` maps an unknown name to -1 (the ILP's Eq. 17-18
+    "no GI on this device" marker) instead of raising.
+    """
+    if vm.profile_ids is not None:
+        if len(vm.profile_ids) != len(models):
+            raise ValueError(
+                f"vm {vm.vm_id}: profile_ids has {len(vm.profile_ids)} "
+                f"entries for a {len(models)}-model fleet")
+        return np.asarray(vm.profile_ids, dtype=np.int32)
+    if len(models) != 1:
+        raise ValueError(
+            f"vm {vm.vm_id} has no profile_ids on a "
+            f"{len(models)}-model fleet; map its GPU requirement "
+            "onto every model (Eq. 27-30, see workload.alibaba."
+            "map_gpu_requirement_to_profile)")
+    index = models[0].profile_index
+    if missing_ok:
+        return np.array([index.get(vm.profile.name, -1)], dtype=np.int32)
+    return np.array([index[vm.profile.name]], dtype=np.int32)
+
+
 @dataclasses.dataclass
 class Host:
     """A physical machine (PM) with 1-8 MIG-enabled GPUs."""
@@ -88,12 +130,9 @@ class Cluster:
                 idx += 1
         # Fleet model list: explicit, or derived in first-appearance order.
         if models is None:
-            seen: List[DeviceModel] = []
-            for i in range(idx):
-                m = self.gpu_index[i][1].model
-                if m not in seen:
-                    seen.append(m)
-            models = tuple(seen) or (DEFAULT_MODEL,)
+            models = derive_fleet(
+                [self.gpu_index[i][1].model for i in range(idx)]
+            ) or (DEFAULT_MODEL,)
         self.models: Tuple[DeviceModel, ...] = tuple(models)
         # Index by model *value* (DeviceModel hashes by its fields), so a
         # custom model reusing a preset's name cannot silently resolve to
@@ -166,27 +205,8 @@ class Cluster:
 
     # -- per-model request resolution -------------------------------------
     def vm_pids(self, vm: VM) -> np.ndarray:
-        """The request's profile index on every fleet model, (M,) int32.
-
-        Multi-model fleets require explicit ``profile_ids``: a profile
-        *name* does not identify a geometry across models (the same name
-        can mean a different block footprint), so there is no safe
-        name-based fallback — the Eq. 27-30 mapping in
-        ``workload.alibaba`` is the way to produce the vector."""
-        if vm.profile_ids is not None:
-            if len(vm.profile_ids) != len(self.models):
-                raise ValueError(
-                    f"vm {vm.vm_id}: profile_ids has {len(vm.profile_ids)} "
-                    f"entries for a {len(self.models)}-model fleet")
-            return np.asarray(vm.profile_ids, dtype=np.int32)
-        if len(self.models) != 1:
-            raise ValueError(
-                f"vm {vm.vm_id} has no profile_ids on a "
-                f"{len(self.models)}-model fleet; map its GPU requirement "
-                "onto every model (Eq. 27-30, see workload.alibaba."
-                "map_gpu_requirement_to_profile)")
-        return np.array([self.models[0].profile_index[vm.profile.name]],
-                        dtype=np.int32)
+        """See :func:`resolve_profile_ids` (strict: unknown names raise)."""
+        return resolve_profile_ids(vm, self.models)
 
     def profile_on(self, vm: VM, gpu: GPU) -> Profile:
         """The concrete Profile ``vm`` occupies on ``gpu``'s model."""
@@ -306,4 +326,5 @@ def make_cluster(gpu_counts: List[int], cpu: float = 128.0,
     return Cluster(hosts, models=models)
 
 
-__all__ = ["VM", "Host", "Cluster", "make_cluster"]
+__all__ = ["VM", "Host", "Cluster", "make_cluster",
+           "resolve_profile_ids", "derive_fleet"]

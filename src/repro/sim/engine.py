@@ -21,11 +21,7 @@ def simulate(cluster: Cluster, policy: PlacementPolicy, vms: List[VM],
              progress: Optional[Callable[[float], None]] = None) -> SimResult:
     # Per-profile tallies are keyed by the fleet's *reference* model
     # (cluster.models[0]) — the model VM.profile is expressed in.
-    res = SimResult(
-        policy=policy.name,
-        per_profile_total={p.name: 0 for p in cluster.models[0].profiles},
-        per_profile_accepted={p.name: 0
-                              for p in cluster.models[0].profiles})
+    res = SimResult.for_model(policy.name, cluster.models[0])
     arrivals = sorted(vms, key=lambda v: (v.arrival, v.vm_id))
     if horizon is None:
         horizon = max((v.arrival for v in arrivals), default=0.0) + step_hours

@@ -2,23 +2,33 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import TYPE_CHECKING, Dict, List
 
 import numpy as np
 
-from ..core.mig import PROFILES
+if TYPE_CHECKING:  # pragma: no cover
+    from ..core.mig import DeviceModel
+
+# numpy renamed trapz -> trapezoid in 2.0 (trapz is removed in 2.x).
+_trapezoid = getattr(np, "trapezoid", None) or np.trapz
 
 
 @dataclasses.dataclass
 class SimResult:
+    """Per-run metrics.  ``per_profile_*`` tallies are keyed by the
+    cluster's *reference* device model (``cluster.models[0]``) — use
+    :meth:`for_model` (or pass the dicts explicitly) so a result built
+    for a non-A100 fleet never carries another model's profile names.
+    The default is *empty*, not the legacy A100-40GB profile set.
+    """
     policy: str
     total_requests: int = 0
     accepted: int = 0
     rejected: int = 0
     per_profile_total: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {p.name: 0 for p in PROFILES})
+        default_factory=dict)
     per_profile_accepted: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {p.name: 0 for p in PROFILES})
+        default_factory=dict)
     hourly_times: List[float] = dataclasses.field(default_factory=list)
     hourly_acceptance: List[float] = dataclasses.field(default_factory=list)
     hourly_active_hw: List[float] = dataclasses.field(default_factory=list)
@@ -28,6 +38,17 @@ class SimResult:
     # Per-VM decisions: vm_ids accepted, in arrival order (both engines
     # fill this; the cross-engine equivalence tests compare it).
     accepted_ids: List[int] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def for_model(cls, policy: str, model: "DeviceModel",
+                  **kw) -> "SimResult":
+        """A result whose per-profile tallies are keyed by ``model``'s
+        profile names (the fleet's reference model)."""
+        return cls(policy=policy,
+                   per_profile_total={p.name: 0 for p in model.profiles},
+                   per_profile_accepted={p.name: 0
+                                         for p in model.profiles},
+                   **kw)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -44,7 +65,7 @@ class SimResult:
         """Area under the active-hardware curve (Table 6)."""
         if len(self.hourly_times) < 2:
             return 0.0
-        return float(np.trapezoid(self.hourly_active_hw, self.hourly_times))
+        return float(_trapezoid(self.hourly_active_hw, self.hourly_times))
 
     def per_profile_acceptance_rate(self) -> Dict[str, float]:
         return {name: (self.per_profile_accepted[name]

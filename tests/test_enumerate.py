@@ -6,7 +6,9 @@ from repro.core.enumerate import (all_configurations, config_cc,
                                   gi_multiset, is_terminal,
                                   per_profile_capacity,
                                   suboptimal_configurations, summary,
-                                  terminal_configurations)
+                                  terminal_configurations, used_mask)
+from repro.core.mig import (A30_24GB, A100_40GB, H100_80GB, available_starts)
+from repro.core.tables import tables_for_model
 
 
 def test_723_unique_configurations():
@@ -90,3 +92,43 @@ def test_summary_keys():
     assert s["unique_configurations"] == 723
     assert s["terminal_configurations"] == 78
     assert s["suboptimal_configurations"] == 482
+
+
+# -- DeviceModel parameterization (beyond the paper's single A100) ----------
+
+
+def test_h100_enumeration_matches_a100_geometry():
+    """H100-80GB has the A100's block geometry with renamed profiles, so
+    its configuration space must have identical counts."""
+    assert summary(H100_80GB) == summary(A100_40GB)
+
+
+def test_a30_enumeration_counts():
+    """A30-24GB: 4 blocks, 9 slots — a small space we can sanity-bound.
+    Counts are pinned as a regression reference (derived, not from the
+    paper, which only covers the A100-40GB)."""
+    s = summary(A30_24GB)
+    assert s["unique_configurations"] == 37
+    assert s["terminal_configurations"] == 10
+    assert s["suboptimal_configurations"] == 4
+    for c in terminal_configurations(A30_24GB):
+        assert config_cc(c, A30_24GB) == 0
+
+
+@pytest.mark.parametrize("model", [A30_24GB, H100_80GB],
+                         ids=lambda m: m.name)
+def test_enumeration_cross_checks_model_tables(model):
+    """Every enumerated configuration's CC, per-profile fit and start
+    counts must agree with the mask-indexed ModelTables for that model —
+    the enumerator and the table builder are independent implementations
+    of the same §5 quantities."""
+    T = tables_for_model(model)
+    for c in all_configurations(model):
+        fmask = model.full_mask & ~used_mask(c, model)
+        free = free_blocks(c, model)
+        assert int(T.cc[fmask]) == config_cc(c, model)
+        assert int(T.popcount[fmask]) == len(free)
+        for pi, p in enumerate(model.profiles):
+            starts = available_starts(free, p)
+            assert int(T.counts[fmask, pi]) == len(starts)
+            assert bool(T.fits[fmask, pi]) == (len(starts) > 0)

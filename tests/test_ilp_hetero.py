@@ -1,0 +1,353 @@
+"""DeviceModel-aware ILP oracle + rolling-horizon ILPPolicy (§6 modernized).
+
+Covers: per-GPU model grammars in ``MigILP``/``validate_solution`` on
+heterogeneous fleets, frozen/must-place resident semantics, and the
+``ILPPolicy`` driver against ``MigILP.solve`` on tiny instances.
+"""
+import numpy as np
+import pytest
+
+from repro.core.ilp import (ILPResult, MigILP, validate_on_cluster,
+                            validate_solution)
+from repro.core.mig import (A30_24GB, A100_40GB, H100_80GB, DeviceModel,
+                            Profile)
+from repro.core.policies import ILPPolicy
+from repro.sim.cluster import VM, make_cluster
+from repro.sim.engine import simulate
+from repro.sim.metrics import SimResult
+
+MIXED = [A30_24GB, A100_40GB, H100_80GB]
+
+
+def mkvm(i, name, model=A100_40GB, weight=1.0, pids=None):
+    return VM(vm_id=i, profile=model.profile_by_name[name], arrival=0.0,
+              duration=1e9, cpu=0.0, ram=0.0, weight=weight,
+              profile_ids=pids)
+
+
+def mixed_vm(i, u, weight=1.0):
+    """A request mapped onto the A30+A100+H100 fleet via Eq. 27-30."""
+    from repro.workload.alibaba import map_gpu_requirement_to_profile
+    pids = tuple(int(map_gpu_requirement_to_profile(
+        np.array([u]), u_max=1.0, model=m)[0]) for m in MIXED)
+    return VM(vm_id=i, profile=MIXED[1].profiles[pids[1]], arrival=0.0,
+              duration=1e9, cpu=0.0, ram=0.0, weight=weight,
+              profile_ids=pids)
+
+
+# ---------------------------------------------------------------------------
+# MigILP under non-A100 grammars
+# ---------------------------------------------------------------------------
+
+
+def test_a30_grammar_two_half_gpus_pack():
+    """Two 1g.12gb (2 blocks, starts {0, 2}) fill one A30."""
+    ilp = MigILP([1], gpu_models=[[A30_24GB]])
+    vms = [mkvm(i, "1g.12gb", A30_24GB) for i in range(2)]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 2
+    assert sorted(z for (_, _, z) in res.accepted.values()) == [0, 2]
+    assert validate_solution(res, vms, [1], gpu_models=[[A30_24GB]])
+
+
+def test_a30_grammar_full_gpu_exclusive():
+    """Two 4g.24gb cannot share an A30 (both must start at block 0)."""
+    ilp = MigILP([1], gpu_models=[[A30_24GB]])
+    vms = [mkvm(i, "4g.24gb", A30_24GB) for i in range(2)]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 1 and len(res.rejected) == 1
+
+
+def test_mixed_fleet_each_gpu_under_its_own_grammar():
+    """On an A30+A100+H100 PM set, the same request stream resolves to a
+    different profile per device and every placement obeys that device's
+    start grammar."""
+    cluster = make_cluster([1, 1, 1],
+                           host_models=["A30-24GB", "A100-40GB",
+                                        "H100-80GB"])
+    # u = 0.5 maps to half-GPU-ish profiles on every model.
+    vms = [mixed_vm(i, 0.5) for i in range(6)]
+    ilp = MigILP.from_cluster(cluster)
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok
+    assert validate_on_cluster(res, vms, cluster)
+    # The oracle must beat/match a single-model encoding of the same VMs:
+    # every placement's start must be legal under the *placed* GPU's model.
+    gpu_models = [cluster.hosts[j].gpus[0].model for j in range(3)]
+    for vm_id, (j, k, z) in res.accepted.items():
+        model = gpu_models[j]
+        pid = vms[vm_id].profile_ids[MIXED.index(model)]
+        assert z in model.profiles[pid].start_blocks
+
+
+def test_oracle_dominates_heuristics_on_mixed_fleet():
+    """Acceptance criterion: ILP accepted weight >= every heuristic's on a
+    mixed fleet instance."""
+    from repro.core.grmu import GRMU
+    from repro.core.policies import POLICY_REGISTRY
+    rng = np.random.default_rng(11)
+    host_models = ["A30-24GB", "A100-40GB", "H100-80GB"]
+    us = rng.uniform(0.05, 1.0, size=10)
+    for pname in ["FF", "BF", "MCC", "MECC", "GRMU"]:
+        vms = [mixed_vm(i, float(us[i])) for i in range(len(us))]
+        cluster = make_cluster([2, 1, 1], host_models=host_models)
+        if pname == "GRMU":
+            pol = GRMU(cluster, heavy_capacity_frac=0.4)
+        else:
+            pol = POLICY_REGISTRY[pname](cluster)
+        heur = sum(pol.place(v) for v in vms)
+        vms = [mixed_vm(i, float(us[i])) for i in range(len(us))]
+        cluster = make_cluster([2, 1, 1], host_models=host_models)
+        ilp = MigILP.from_cluster(cluster)
+        for v in vms:
+            ilp.add_vm(v)
+        res = ilp.solve()
+        assert res.ok and validate_on_cluster(res, vms, cluster)
+        assert len(res.accepted) >= heur, pname
+
+
+def test_pm_symmetry_groups_by_model_value_not_name():
+    """Two PMs whose GPUs share a *name* but not a geometry must not be
+    treated as interchangeable by the symmetry breaker: a VM that only
+    fits the bigger device must still land there (regression: grouping
+    by name forced the small PM active first and cut off the optimum)."""
+    small = DeviceModel("A100-40GB", 4, (
+        Profile("1g.5gb", 1, 1, (0, 1, 2, 3)),
+    ))
+    ilp = MigILP([1, 1], gpu_models=[[small], [A100_40GB]])
+    vm = VM(vm_id=0, profile=A100_40GB.profile_by_name["7g.40gb"],
+            arrival=0.0, duration=1e9, cpu=0.0, ram=0.0,
+            profile_ids=(-1, A100_40GB.profile_index["7g.40gb"]))
+    ilp.add_vm(vm)
+    res = ilp.solve()
+    assert res.ok and res.accepted[0] == (1, 0, 0)
+
+
+def test_z_stability_no_gratuitous_resident_shuffle():
+    """Movable residents must keep their start blocks when no migration
+    is needed (the epsilon z-penalty; without it any permutation of the
+    window's blocks is an equally optimal solution)."""
+    ilp = MigILP([1])
+    ilp.add_vm(mkvm(0, "1g.5gb"), resident_at=(0, 0, 6), delta=1.0,
+               must_place=True)
+    ilp.add_vm(mkvm(1, "1g.5gb"), resident_at=(0, 0, 4), delta=1.0,
+               must_place=True)
+    ilp.add_vm(mkvm(2, "1g.5gb"))
+    res = ilp.solve()
+    assert res.ok and len(res.accepted) == 3
+    assert res.accepted[0] == (0, 0, 6)
+    assert res.accepted[1] == (0, 0, 4)
+
+
+def test_vm_symmetry_excludes_must_place_twins():
+    """An ordinary VM and an identical must_place VM must not be forced
+    into acceptance order (regression: grouping them made 'place only
+    the obligated twin' infeasible)."""
+    ilp = MigILP([1])
+    ilp.add_vm(mkvm(0, "7g.40gb"))
+    ilp.add_vm(mkvm(1, "7g.40gb"), must_place=True)
+    res = ilp.solve()
+    assert res.ok and 1 in res.accepted and 0 in res.rejected
+
+
+def test_ilp_policy_window_zero_means_no_migration():
+    """window=0 must unlock *no* residents (regression: residents[-0:]
+    sliced the whole list, the opposite of the documented bound)."""
+    cluster = make_cluster([1])
+    pol = ILPPolicy(cluster, window=0, time_limit=30.0)
+    assert pol.place(mkvm(0, "3g.20gb"))
+    _, gpu = cluster.placements[0]
+    if gpu.placements[0][1] == 4:
+        cluster.release(0)
+        cluster.place_at(mkvm(0, "3g.20gb"), gpu, 0)
+    assert not pol.place(mkvm(1, "4g.20gb"))
+    assert pol.migrations == 0
+
+
+def test_arithmetic_grammar_guard():
+    """A model whose start set is not {multiples of size <= s} must be
+    rejected at construction rather than silently mis-encoded."""
+    weird = DeviceModel("weird", 8, (
+        Profile("odd", 2, 1, (1, 5)),   # starts not multiples of 2
+    ))
+    with pytest.raises(ValueError, match="start-grammar"):
+        MigILP([1], gpu_models=[[weird]])
+
+
+# ---------------------------------------------------------------------------
+# validate_solution on heterogeneous fleets
+# ---------------------------------------------------------------------------
+
+
+def _result(accepted):
+    return ILPResult(0, "", accepted, [], 0.0, 0, 0, 0, 0, feasible=True)
+
+
+def test_validate_rejects_start_illegal_on_this_model():
+    """Start 4 is legal for the A100's 3g.20gb but the A30's 1g.12gb
+    (same request, different device) only allows {0, 2}."""
+    vms = [mixed_vm(0, 0.5)]
+    # On the A30 GPU, pid resolves to a 2-block profile with starts {0,2}.
+    ok = validate_solution(_result({0: (0, 0, 0)}), vms, [1],
+                          gpu_models=[[A30_24GB]], models=MIXED)
+    bad = validate_solution(_result({0: (0, 0, 1)}), vms, [1],
+                           gpu_models=[[A30_24GB]], models=MIXED)
+    assert ok and not bad
+
+
+def test_validate_rejects_overlap_per_gpu():
+    vms = [mkvm(0, "3g.20gb"), mkvm(1, "4g.20gb")]
+    assert not validate_solution(
+        _result({0: (0, 0, 0), 1: (0, 0, 0)}), vms, [1])
+    assert validate_solution(
+        _result({0: (0, 0, 4), 1: (0, 0, 0)}), vms, [1])
+
+
+def test_validate_rejects_incompatible_model():
+    """profile_ids of -1 == the request has no GI on that device model."""
+    vm = VM(vm_id=0, profile=A100_40GB.profiles[0], arrival=0.0,
+            duration=1.0, profile_ids=(-1, 0))
+    assert not validate_solution(
+        _result({0: (0, 0, 0)}), [vm], [1],
+        gpu_models=[[A30_24GB]], models=[A30_24GB, A100_40GB])
+
+
+def test_validate_rejects_unknown_gpu_coordinates():
+    vms = [mkvm(0, "1g.5gb")]
+    assert not validate_solution(_result({0: (0, 5, 0)}), vms, [1])
+
+
+# ---------------------------------------------------------------------------
+# Frozen / must-place resident semantics (the rolling-horizon window)
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_resident_blocks_otherwise_acceptable_arrival():
+    """A 3g.20gb frozen at start 0 makes a 4g.20gb unplaceable; unfreezing
+    it (delta=1) admits both via one intra-GPU move."""
+    resident, new = mkvm(0, "3g.20gb"), mkvm(1, "4g.20gb")
+    frozen = MigILP([1])
+    frozen.add_vm(resident, resident_at=(0, 0, 0), frozen=True)
+    frozen.add_vm(new)
+    res = frozen.solve()
+    assert res.ok and res.accepted[0] == (0, 0, 0)
+    assert 1 in res.rejected
+
+    movable = MigILP([1], w_mig=1.0)
+    movable.add_vm(resident, resident_at=(0, 0, 0), delta=1.0,
+                   must_place=True)
+    movable.add_vm(new)
+    res = movable.solve()
+    assert res.ok and len(res.accepted) == 2
+    assert res.accepted[0][2] == 4
+
+
+def test_must_place_prevents_eviction():
+    """Without must_place the solver happily evicts a light resident for a
+    heavier arrival; with it the resident is inviolable."""
+    resident = mkvm(0, "1g.5gb", weight=0.1)
+    heavy = mkvm(1, "7g.40gb", weight=100.0)
+    evictable = MigILP([1])
+    evictable.add_vm(resident, resident_at=(0, 0, 6), delta=1.0)
+    evictable.add_vm(heavy)
+    res = evictable.solve()
+    assert res.ok and 1 in res.accepted and 0 in res.rejected
+
+    pinned = MigILP([1])
+    pinned.add_vm(resident, resident_at=(0, 0, 6), delta=1.0,
+                  must_place=True)
+    pinned.add_vm(heavy)
+    res = pinned.solve()
+    assert res.ok and 0 in res.accepted and 1 in res.rejected
+
+
+# ---------------------------------------------------------------------------
+# ILPPolicy (rolling horizon) vs MigILP.solve
+# ---------------------------------------------------------------------------
+
+
+def test_ilp_policy_migrates_to_admit():
+    """The paper's motivating example as an *online* run: the rolling
+    horizon re-places the 3g.20gb resident so the 4g.20gb fits."""
+    cluster = make_cluster([1])
+    pol = ILPPolicy(cluster, window=4, time_limit=30.0)
+    assert pol.place(mkvm(0, "3g.20gb"))
+    assert pol.place(mkvm(1, "4g.20gb"))
+    assert pol.migrations == pol.intra_migrations == 1
+    starts = sorted(cluster.placements[v][1].placements[v][1]
+                    for v in (0, 1))
+    assert starts == [0, 4]
+
+
+def test_ilp_policy_no_migration_mode_rejects():
+    cluster = make_cluster([1])
+    pol = ILPPolicy(cluster, window=4, time_limit=30.0,
+                    allow_migration=False)
+    assert pol.place(mkvm(0, "3g.20gb"))
+    _, gpu = cluster.placements[0]
+    if gpu.placements[0][1] == 4:
+        # Solver parked the resident at start 4; force the blocking layout.
+        cluster.release(0)
+        cluster.place_at(mkvm(0, "3g.20gb"), gpu, 0)
+    assert not pol.place(mkvm(1, "4g.20gb"))
+    assert pol.migrations == 0
+
+
+def test_ilp_policy_matches_batch_oracle_on_feasible_instance():
+    """When the whole batch fits, the online rolling horizon must reach
+    the oracle's acceptance (both = all VMs)."""
+    names = ["3g.20gb", "3g.20gb", "4g.20gb", "2g.10gb", "1g.10gb",
+             "1g.5gb"]
+    cluster = make_cluster([2, 1])
+    pol = ILPPolicy(cluster, window=6, time_limit=30.0)
+    online = sum(pol.place(mkvm(i, nm)) for i, nm in enumerate(names))
+    ilp = MigILP([2, 1])
+    vms = [mkvm(i, nm) for i, nm in enumerate(names)]
+    for v in vms:
+        ilp.add_vm(v)
+    res = ilp.solve()
+    assert res.ok and validate_solution(res, vms, [2, 1])
+    assert online == len(res.accepted) == len(names)
+    assert online <= len(res.accepted)  # online never beats offline
+
+
+def test_ilp_policy_simulate_hetero_accounting():
+    """End-to-end through sim/engine.py on a mixed fleet: SimResult rows
+    carry reference-model profile keys and the policy's migration split."""
+    from repro.workload.alibaba import FLEET_PRESETS, TraceConfig, generate
+    cfg = TraceConfig(n_hosts=3, n_vms=10, horizon_hours=6.0,
+                      fleet=FLEET_PRESETS["a30_a100_h100"], seed=3)
+    cluster, vms = generate(cfg)
+    pol = ILPPolicy(cluster, window=6, time_limit=30.0)
+    res = simulate(cluster, pol, vms)
+    assert res.total_requests == len(vms)
+    assert res.accepted == len(res.accepted_ids)
+    assert set(res.per_profile_total) == {
+        p.name for p in cluster.models[0].profiles}
+    assert res.migrations == pol.migrations
+    assert res.intra_migrations + res.inter_migrations == res.migrations
+    assert sum(res.per_profile_accepted.values()) == res.accepted
+    # Every live placement is legal under its GPU's own model.
+    for vm_id, (host, gpu) in cluster.placements.items():
+        prof, start = gpu.placements[vm_id]
+        assert prof in gpu.model.profiles
+        assert start in prof.start_blocks
+
+
+def test_simresult_default_is_model_free():
+    """Satellite: a SimResult built outside simulate() must not carry
+    A100 profile keys by default; for_model keys by the given model."""
+    assert SimResult("x").per_profile_total == {}
+    r = SimResult.for_model("y", A30_24GB)
+    assert set(r.per_profile_total) == {p.name for p in A30_24GB.profiles}
+    # trapezoid guard: works on any numpy, including the empty case
+    assert r.active_hw_auc == 0.0
+    r.hourly_times = [0.0, 1.0, 2.0]
+    r.hourly_active_hw = [0.0, 1.0, 1.0]
+    assert r.active_hw_auc == pytest.approx(1.5)
