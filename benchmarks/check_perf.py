@@ -1,0 +1,76 @@
+"""CI perf gate: compare a fresh BENCH_batched_engine.json to a baseline.
+
+    python benchmarks/check_perf.py NEW BASELINE [--tol 0.30]
+
+Fails (exit 1) when any of:
+  * ``decisions_match`` is false (batched engine diverged from the
+    sequential reference);
+  * ``sharded_decisions_match`` is false (shard_map path diverged —
+    ``null``/absent means the run had one device and is not gated);
+  * any rung's ``compile_amortization_ratio`` exceeds 0.05 (a second
+    trace from an already-seen bucket recompiled);
+  * the base rung's ``batched_events_per_sec`` regressed more than
+    ``--tol`` (default 30%, env ``PERF_REGRESS_TOL``) vs the baseline.
+
+Throughput is only gated downward — faster is always fine.  No imports
+beyond the stdlib, so the gate itself can never perturb the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+AMORTIZE_MAX_RATIO = 0.05
+
+
+def check(new: dict, base: dict, tol: float) -> list:
+    errors = []
+    if not new.get("decisions_match", False):
+        errors.append("decisions_match is false: batched replay diverged "
+                      "from the sequential engine")
+    if new.get("sharded_decisions_match") is False:
+        errors.append("sharded_decisions_match is false: shard_map replay "
+                      f"diverged ({new.get('sharded')})")
+    for rung in new.get("ladder", []):
+        ratio = rung.get("compile_amortization_ratio")
+        if ratio is not None and ratio > AMORTIZE_MAX_RATIO:
+            errors.append(
+                f"rung {rung['rung']}: warm-bucket compile ratio "
+                f"{ratio:.3f} > {AMORTIZE_MAX_RATIO} — the compile cache "
+                "missed on an already-seen bucket")
+    new_eps = new.get("batched_events_per_sec", 0.0)
+    base_eps = base.get("batched_events_per_sec", 0.0)
+    if base_eps > 0 and new_eps < (1.0 - tol) * base_eps:
+        errors.append(
+            f"events/sec regressed {(1 - new_eps / base_eps) * 100:.0f}% "
+            f"({base_eps:.0f} -> {new_eps:.0f}; tolerance {tol:.0%})")
+    return errors
+
+
+def main() -> None:
+    import os
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new")
+    ap.add_argument("baseline")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("PERF_REGRESS_TOL",
+                                                 "0.30")))
+    args = ap.parse_args()
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    errors = check(new, base, args.tol)
+    eps = new.get("batched_events_per_sec", 0.0)
+    print(f"perf gate: events/sec={eps:.0f} "
+          f"(baseline {base.get('batched_events_per_sec', 0.0):.0f}), "
+          f"decisions_match={new.get('decisions_match')}, "
+          f"sharded={new.get('sharded_decisions_match')}")
+    for e in errors:
+        print(f"PERF GATE FAILURE: {e}", file=sys.stderr)
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,25 +1,33 @@
 """Beyond-paper: batched scoring throughput (tables vs kernels vs python).
 
-The datacenter-scale hot loop is scoring N GPUs per request; this table
-shows the per-call cost of (a) the object-level python scan, (b) the
-vectorized NumPy table gather (CPU production path), (c) the Pallas
-kernel in interpret mode (CPU correctness path; compiled on TPU).
+Two tiers.  Standalone arrays: per-call cost of (a) the object-level
+python scan, (b) the vectorized NumPy table gather (CPU production
+path), (c) the Pallas kernels in interpret mode (CPU correctness path;
+compiled on TPU).  Engine call path: the same MCC/MECC replay through
+``repro.core.batched`` with ``score_backend="tables"`` vs
+``score_backend="pallas_interpret"`` — the ratio row is the number that
+decides which backend ``score_backend="auto"`` should pick on this
+platform (interpret-mode Pallas is expected to lose on CPU; the fused
+path is for TPU, where the kernels compile).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import batched as B
 from repro.core import tables as T
+from repro.core.bucketing import pad_events
 from repro.core.mig import GPU, gpu_from_free_mask, get_cc
 from repro.kernels.ops import cc_scores, frag_scores, mcc_scores
+from repro.workload.alibaba import TraceConfig, generate
 
 from .common import emit, timed
 
 N = 8192  # ~datacenter GPU count
 
 
-def run() -> None:
+def _standalone() -> None:
     rng = np.random.default_rng(0)
     masks = rng.integers(0, 256, size=N).astype(np.uint8)
     gpus = [gpu_from_free_mask(int(m)) for m in masks[:512]]
@@ -48,3 +56,37 @@ def run() -> None:
     _, us = timed(lambda: mcc_scores(jm, 3).block_until_ready(), repeats=5)
     emit("scoring.pallas_mcc_8192_interpret", us,
          f"per_gpu_ns={us/N*1000:.1f}")
+
+
+def _engine_path() -> None:
+    """The kernels through the engine's *actual* call path: a full MCC /
+    MECC replay, identical trace and decisions, only the scoring backend
+    swapped.  Fleet padded to the Pallas lane width (min_gpus=128)."""
+    cluster, vms = generate(TraceConfig(scale=0.05, seed=3))
+    ev = pad_events(B.build_events(vms, cluster), min_gpus=128)
+    cap = B.default_heavy_capacity(ev)
+    for name, pid in (("mcc", B.MCC), ("mecc", B.MECC)):
+        results, times = {}, {}
+        for backend in ("tables", "pallas_interpret"):
+            fn = B.make_replay(ev, pid, score_backend=backend)
+            out = fn(cap)
+            out["accepted"].block_until_ready()        # compile
+            def steady():
+                o = fn(cap)
+                o["accepted"].block_until_ready()
+                return o
+            out, us = timed(steady, repeats=3)
+            results[backend] = B.result_from_arrays(ev, pid, out)
+            times[backend] = us
+        match = (results["tables"].accepted_ids
+                 == results["pallas_interpret"].accepted_ids)
+        ratio = times["pallas_interpret"] / times["tables"]
+        emit(f"scoring.engine_{name}_jnp_vs_pallas", times["tables"],
+             f"pallas_us={times['pallas_interpret']:.0f} "
+             f"jnp_vs_pallas_ratio={ratio:.2f} "
+             f"decisions_match={int(match)} gpus={len(ev.gpu_model_id)}")
+
+
+def run() -> None:
+    _standalone()
+    _engine_path()

@@ -17,6 +17,29 @@ table is padded to a common shape and stacked along a leading model axis
 plus each VM's Eq. 27-30 profile mapping onto every fleet model, and all
 table lookups gather by ``(model_id, free_mask, profile)``.
 
+Scale path (hyperscale replay; see docs/ARCHITECTURE.md):
+
+  * the scan body is compiled as a function of the *trace arrays* — the
+    event stream, fleet topology and VM metadata are jit **arguments**
+    (one pytree, ``trace_arrays``), not closed-over constants, so two
+    traces with the same padded shapes share one executable;
+  * ``repro.core.bucketing.pad_events`` pads every trace dimension to a
+    power-of-two bucket with provably decision-neutral padding (PAD
+    events, zero-capacity hosts, never-feasible GPUs), making the
+    compile cache effective across scales and fleets;
+  * the initial scan state is built per call (``init_state``) and
+    **donated** to the compiled function, so XLA reuses the state
+    buffers in place across the scan instead of copying them;
+  * all in-scan state is 32-bit (int32/float32) and every metric series
+    is accumulated into preallocated in-scan buffers (``hourly``,
+    ``counts``) — a 1M-VM / 10k-GPU trace fits comfortably on host CPU;
+  * ``repro.core.sharded`` wraps the same scan body in ``shard_map`` so
+    the per-arrival scoring gathers run on fleet partitions with a cheap
+    cross-shard argmax reconcile (decision-identical to this module);
+  * ``score_backend="pallas"`` routes MCC/MECC scoring through the
+    Pallas kernels (``repro.kernels.policy_score``), with the
+    interpreter/jnp fallback auto-selected on CPU.
+
 Feature parity with the sequential engine (validated decision-for-decision
 in tests/test_equivalence.py, including on mixed A30+A100+H100 clusters):
 
@@ -42,17 +65,29 @@ scans resolve ties by lowest globalIndex.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Callable, List, Optional, Tuple, Union
+import warnings
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+# The replay donates its initial state (see init_state) so XLA may reuse
+# the carry buffers in place.  The replay's *outputs* are small reductions
+# of the carry, so no output can alias a donated input — jax warns about
+# exactly that on every compile; the donation is still what lets the scan
+# run the 1M-VM state without a second live copy, so the warning is noise
+# here.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
 from ..sim.cluster import VM, Cluster
 from ..sim.metrics import SimResult
 from .mig import A100_40GB, DeviceModel, PROFILE_INDEX
 from . import policy_core as pc
+from . import compile_cache
 
 # Policy ids re-exported for callers of this module.  The old engine's
 # "GRMU-DB" policy id is gone: the DB point is GRMU with defrag=False,
@@ -61,17 +96,29 @@ FF, BF, MCC, MECC, GRMU = pc.FF, pc.BF, pc.MCC, pc.MECC, pc.GRMU
 
 HEAVY_PROFILE = pc.HEAVY_PROFILE
 
-# Event kinds, in within-bucket processing order.
-DEPARTURE, ARRIVAL, STEP_END = 0, 1, 2
+# Event kinds, in within-bucket processing order.  PAD rows are appended
+# by ``repro.core.bucketing.pad_events`` and are a proven no-op: the
+# scan's PAD branch returns the state unchanged.
+DEPARTURE, ARRIVAL, STEP_END, PAD = 0, 1, 2, 3
+
+# Basket label of GPUs that only exist as shape padding: never selectable,
+# never grown, never a defrag/consolidation candidate.
+PAD_BASKET = -1
 
 _EPS = 1e-9
 
 
 @dataclasses.dataclass
 class EventTrace:
-    """Host-precomputed event stream + static cluster/VM metadata."""
+    """Host-precomputed event stream + static cluster/VM metadata.
+
+    ``num_vms`` / ``num_gpus`` / ``num_hosts`` / ``vm_ids`` /
+    ``step_times`` always describe the *logical* (unpadded) trace; after
+    ``repro.core.bucketing.pad_events`` the array fields may be longer
+    (power-of-two buckets) and ``hourly_slots`` carries the padded
+    metric-buffer length."""
     # Per-event rows (E,), sorted by (bucket, kind, time, vm_id):
-    kind: np.ndarray         # int32: DEPARTURE | ARRIVAL | STEP_END
+    kind: np.ndarray         # int32: DEPARTURE | ARRIVAL | STEP_END | PAD
     vm_index: np.ndarray     # int32 dense 0..N-1 (0 for step-end rows)
     profile: np.ndarray      # int32 reference-model profile (0 for step-end)
     time: np.ndarray         # float32 step start t of the row's bucket
@@ -99,6 +146,8 @@ class EventTrace:
     cpu_cap: np.ndarray      # (H,) float32
     ram_cap: np.ndarray      # (H,) float32
     step_hours: float = 1.0
+    # Padded metric-buffer rows (None = len(step_times), i.e. unpadded).
+    hourly_slots: Optional[int] = None
 
 
 def _arr_bucket(t: float, step: float) -> int:
@@ -111,6 +160,117 @@ def _dep_bucket(t: float, step: float) -> int:
     # Bucket at whose start the sequential engine pops a departure:
     # smallest b with t <= (b+1)*step - eps.
     return int(math.ceil((t + _EPS) / step)) - 1
+
+
+def step_grid(horizon: float, step_hours: float) -> np.ndarray:
+    """Exactly the sequential engine's sampling loop (accumulated float64
+    grid, inclusive of the first step at/after ``horizon``)."""
+    times = []
+    t = 0.0
+    while t < horizon + _EPS:
+        times.append(t)
+        t += step_hours
+    return np.asarray(times, np.float64)
+
+
+def build_events_arrays(*, arrival: np.ndarray, duration: np.ndarray,
+                        cpu: np.ndarray, ram: np.ndarray,
+                        vm_ids: np.ndarray, pids: np.ndarray,
+                        models: Tuple[DeviceModel, ...],
+                        gpu_model_id: np.ndarray, gpu_host_id: np.ndarray,
+                        cpu_cap: np.ndarray, ram_cap: np.ndarray,
+                        step_hours: float = 1.0,
+                        horizon: Optional[float] = None) -> EventTrace:
+    """Vectorized trace lowering from plain arrays (no VM objects).
+
+    This is the million-VM path: every per-VM quantity arrives as a numpy
+    array and the event rows are built and sorted with numpy — identical
+    ordering semantics to :func:`build_events` (which now delegates here).
+    ``pids`` is (N, M): each VM's Eq. 27-30 profile per fleet model.
+    """
+    arrival = np.asarray(arrival, np.float64).reshape(-1)
+    duration = np.asarray(duration, np.float64).reshape(-1)
+    n = arrival.shape[0]
+    M = len(models)
+    pids = (np.asarray(pids, np.int32).reshape(n, M) if n
+            else np.zeros((0, M), np.int32))
+    vm_ids = np.asarray(vm_ids, np.int64).reshape(-1)
+    cpu = np.asarray(cpu, np.float32).reshape(-1)
+    ram = np.asarray(ram, np.float32).reshape(-1)
+
+    # Dense (arrival, vm_id) order — the engines' globalIndex order.
+    order = np.lexsort((vm_ids, arrival))
+    arrival, duration = arrival[order], duration[order]
+    vm_ids, pids = vm_ids[order], pids[order]
+    cpu, ram = cpu[order], ram[order]
+    departure = arrival + duration
+
+    # Heavy iff the request maps to the full-GPU profile on EVERY model
+    # (vectorized pc.heavy_request).
+    hp = np.array([m.heavy_profile for m in models], np.int32)
+    heavy = (np.all((pids == hp[None, :]) & (hp[None, :] >= 0), axis=1)
+             if n else np.zeros(0, bool))
+
+    if horizon is None:
+        horizon = (float(arrival.max()) if n else 0.0) + step_hours
+    st64 = step_grid(horizon, step_hours)
+    S = len(st64)
+
+    # Bucket math — identical float64 expressions to the scalar helpers.
+    ab = np.floor((arrival + _EPS) / step_hours).astype(np.int64)
+    db = np.ceil((departure + _EPS) / step_hours).astype(np.int64) - 1
+    # A same-bucket departure is heap-popped one bucket later (the heap
+    # push happens after the bucket's departure phase).
+    db = np.maximum(db, ab + 1)
+    inc = ab < S            # past-horizon arrivals are never offered
+    dep_inc = inc & (db < S)
+    a_ord = np.cumsum(inc) - 1              # arrival ordinal over included
+
+    dense = np.arange(n, dtype=np.int64)
+    ref_p = pids[:, 0] if n else np.zeros(0, np.int32)
+
+    def rows(sel, kind, t_actual, tiebreak, bucket, idx):
+        return dict(bucket=bucket[sel], kind=np.full(sel.sum(), kind,
+                                                     np.int64),
+                    t=t_actual[sel], tb=tiebreak[sel],
+                    vm=dense[sel], p=ref_p[sel].astype(np.int64),
+                    idx=idx[sel])
+
+    arr = rows(inc, ARRIVAL, arrival, vm_ids, ab, a_ord)
+    dep = rows(dep_inc, DEPARTURE, departure, vm_ids, db, np.zeros(n,
+                                                                   np.int64))
+    si = np.arange(S, dtype=np.int64)
+    stp = dict(bucket=si, kind=np.full(S, STEP_END, np.int64),
+               t=np.full(S, np.inf), tb=np.zeros(S, np.int64),
+               vm=np.zeros(S, np.int64), p=np.zeros(S, np.int64), idx=si)
+
+    cat = {k: np.concatenate([arr[k], dep[k], stp[k]]) for k in arr}
+    perm = np.lexsort((cat["tb"], cat["t"], cat["kind"], cat["bucket"]))
+    for k in cat:
+        cat[k] = cat[k][perm]
+
+    return EventTrace(
+        kind=cat["kind"].astype(np.int32),
+        vm_index=cat["vm"].astype(np.int32),
+        profile=cat["p"].astype(np.int32),
+        time=st64[cat["bucket"]].astype(np.float32),
+        idx=cat["idx"].astype(np.int32),
+        vm_ids=vm_ids,
+        vm_pids=pids,
+        vm_heavy=heavy,
+        vm_cpu=cpu,
+        vm_ram=ram,
+        arr_times=st64[ab[inc]].astype(np.float32),
+        arr_pids=pids[inc],
+        step_times=st64,
+        num_vms=n,
+        num_gpus=len(gpu_model_id), num_hosts=len(cpu_cap),
+        models=tuple(models),
+        gpu_model_id=np.asarray(gpu_model_id, np.int32),
+        gpu_host_id=np.asarray(gpu_host_id, np.int32),
+        cpu_cap=np.asarray(cpu_cap, np.float32),
+        ram_cap=np.asarray(ram_cap, np.float32),
+        step_hours=step_hours)
 
 
 def build_events(vms: List[VM], cluster: Union[Cluster, int],
@@ -153,367 +313,479 @@ def build_events(vms: List[VM], cluster: Union[Cluster, int],
             return np.array([PROFILE_INDEX[vm.profile.name]], np.int32)
 
     M = len(models)
-    order = sorted(vms, key=lambda v: (v.arrival, v.vm_id))
-    all_pids = (np.stack([pids_of(v) for v in order])
-                if order else np.zeros((0, M), np.int32)).astype(np.int32)
-    all_heavy = np.array([pc.heavy_request(models, all_pids[i])
-                          for i in range(len(order))], dtype=bool)
-    if horizon is None:
-        horizon = max((v.arrival for v in order), default=0.0) + step_hours
-    # Exactly the sequential engine's sampling loop.
-    step_times = []
-    t = 0.0
-    while t < horizon + _EPS:
-        step_times.append(t)
-        t += step_hours
-    S = len(step_times)
+    all_pids = (np.stack([pids_of(v) for v in vms])
+                if vms else np.zeros((0, M), np.int32)).astype(np.int32)
+    return build_events_arrays(
+        arrival=np.array([v.arrival for v in vms], np.float64),
+        duration=np.array([v.duration for v in vms], np.float64),
+        cpu=np.array([v.cpu for v in vms], np.float32),
+        ram=np.array([v.ram for v in vms], np.float32),
+        vm_ids=np.array([v.vm_id for v in vms], np.int64),
+        pids=all_pids, models=tuple(models),
+        gpu_model_id=gpu_model_id, gpu_host_id=gpu_host_id,
+        cpu_cap=cpu_cap, ram_cap=ram_cap,
+        step_hours=step_hours, horizon=horizon)
 
-    rows = []  # (bucket, kind, time, tiebreak, vm_index, profile, t, idx)
-    arr_times, arr_rows = [], []
-    for dense_i, vm in enumerate(order):
-        p = int(all_pids[dense_i, 0])  # reference-model profile
-        ab = _arr_bucket(vm.arrival, step_hours)
-        if ab >= S:
-            continue  # past the horizon: never offered sequentially
-        a_ord = len(arr_times)
-        arr_times.append(step_times[ab])
-        arr_rows.append(all_pids[dense_i])
-        rows.append((ab, ARRIVAL, vm.arrival, vm.vm_id, dense_i, p,
-                     step_times[ab], a_ord))
-        # A same-bucket departure is heap-popped one bucket later (the
-        # heap push happens after the bucket's departure phase).
-        db = max(_dep_bucket(vm.departure, step_hours), ab + 1)
-        if db < S:
-            rows.append((db, DEPARTURE, vm.departure, vm.vm_id, dense_i, p,
-                         step_times[db], 0))
-    for si, st in enumerate(step_times):
-        rows.append((si, STEP_END, np.inf, 0, 0, 0, st, si))
-    rows.sort(key=lambda r: (r[0], r[1], r[2], r[3]))
 
-    return EventTrace(
-        kind=np.array([r[1] for r in rows], np.int32),
-        vm_index=np.array([r[4] for r in rows], np.int32),
-        profile=np.array([r[5] for r in rows], np.int32),
-        time=np.array([r[6] for r in rows], np.float32),
-        idx=np.array([r[7] for r in rows], np.int32),
-        vm_ids=np.array([v.vm_id for v in order], np.int64),
-        vm_pids=all_pids,
-        vm_heavy=all_heavy,
-        vm_cpu=np.array([v.cpu for v in order], np.float32),
-        vm_ram=np.array([v.ram for v in order], np.float32),
-        arr_times=np.asarray(arr_times, np.float32).reshape(-1),
-        arr_pids=(np.stack(arr_rows).astype(np.int32) if arr_rows
-                  else np.zeros((0, M), np.int32)),
-        step_times=np.asarray(step_times, np.float64),
-        num_vms=len(order), num_gpus=num_gpus, num_hosts=num_hosts,
-        models=tuple(models), gpu_model_id=gpu_model_id,
-        gpu_host_id=gpu_host_id, cpu_cap=cpu_cap, ram_cap=ram_cap,
-        step_hours=step_hours)
+# ---------------------------------------------------------------------------
+# Replay statics — the compile-cache key
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplayStatics:
+    """Everything the scan body specializes on.  One jitted function per
+    distinct value; XLA then caches one executable per (statics, bucket
+    shape) — which is exactly the replay compile-cache key
+    ``(bucket_shape, policy, cfg, model-set)``."""
+    policy: int
+    models: Tuple[DeviceModel, ...]
+    defrag: bool = True
+    consolidation_interval: Optional[float] = None
+    defrag_trigger: str = "light"
+    mecc_window: float = 24.0
+    # "tables" = per-model mask-table gathers (jnp; the CPU path);
+    # "pallas" / "pallas_interpret" = fused MCC/MECC scoring kernels.
+    score_backend: str = "tables"
+    # Sharded-fleet replay (repro.core.sharded): shard_map axis + count.
+    axis_name: Optional[str] = None
+    num_shards: int = 0
+
+
+def replay_statics(events: EventTrace, policy: int, *,
+                   defrag: bool = True,
+                   consolidation_interval: Optional[float] = None,
+                   defrag_trigger: str = "light",
+                   mecc_window: float = 24.0,
+                   score_backend: str = "auto",
+                   axis_name: Optional[str] = None,
+                   num_shards: int = 0) -> ReplayStatics:
+    """Resolve user cfg (including ``score_backend="auto"``) against the
+    trace's shapes/fleet into a hashable :class:`ReplayStatics`."""
+    from ..kernels.policy_score import LANES
+    G = len(events.gpu_model_id)
+    kernel_ok = (policy in (MCC, MECC) and len(events.models) == 1
+                 and G % LANES == 0)
+    if score_backend == "auto":
+        # The fused kernels only pay off where they compile (TPU); on CPU
+        # the jnp table-gather path is the fast fallback.
+        score_backend = ("pallas" if kernel_ok and not num_shards
+                         and jax.default_backend() == "tpu" else "tables")
+    if score_backend != "tables":
+        if not kernel_ok:
+            raise ValueError(
+                f"score_backend={score_backend!r} needs a single-model "
+                f"fleet, policy MCC/MECC and num_gpus % {LANES} == 0 "
+                f"(got policy={policy}, M={len(events.models)}, G={G}); "
+                "bucket the trace (repro.core.bucketing.pad_events)")
+        if num_shards:
+            raise ValueError("Pallas scoring is not supported on the "
+                             "sharded path; use score_backend='tables'")
+    return ReplayStatics(
+        policy=policy, models=tuple(events.models), defrag=defrag,
+        consolidation_interval=consolidation_interval,
+        defrag_trigger=defrag_trigger, mecc_window=mecc_window,
+        score_backend=score_backend, axis_name=axis_name,
+        num_shards=num_shards)
+
+
+def _gpu_full(events: EventTrace) -> np.ndarray:
+    """Per-GPU all-free mask; 0 on padded GPUs, so padding is both
+    never-feasible (no free blocks) and never-active (free == full)."""
+    full = np.array([m.full_mask for m in events.models], np.int32)
+    out = full[events.gpu_model_id]
+    out[events.num_gpus:] = 0
+    return out
+
+
+def trace_arrays(events: EventTrace) -> Dict[str, np.ndarray]:
+    """The scan's traced-argument pytree (host numpy; callers move it to
+    device).  Everything shape-padded lives here; two traces in the same
+    bucket produce identical shapes/dtypes and share one executable."""
+    M = len(events.models)
+    n_vm_rows = len(events.vm_pids)
+    return dict(
+        kind=np.clip(events.kind, 0, 3).astype(np.int32),
+        vm_index=events.vm_index.astype(np.int32),
+        profile=events.profile.astype(np.int32),
+        time=events.time.astype(np.float32),
+        idx=events.idx.astype(np.int32),
+        vm_pids=(events.vm_pids.astype(np.int32) if n_vm_rows
+                 else np.zeros((1, M), np.int32)),
+        vm_heavy=(events.vm_heavy.astype(bool) if n_vm_rows
+                  else np.zeros(1, bool)),
+        # Per-VM (cpu, ram) rows, so host feasibility is one gather + one
+        # fused compare.
+        vm_res=(np.stack([events.vm_cpu, events.vm_ram],
+                         axis=1).astype(np.float32) if n_vm_rows
+                else np.zeros((1, 2), np.float32)),
+        gpu_mid=events.gpu_model_id.astype(np.int32),
+        gpu_host=events.gpu_host_id.astype(np.int32),
+        gpu_full=_gpu_full(events),
+        cpu_cap=events.cpu_cap.astype(np.float32),
+        ram_cap=events.ram_cap.astype(np.float32),
+        arr_times=(events.arr_times.astype(np.float32)
+                   if len(events.arr_times)
+                   else np.full(1, np.inf, np.float32)),
+        arr_pids=(events.arr_pids.astype(np.int32)
+                  if len(events.arr_times) else np.zeros((1, M), np.int32)),
+        # Logical fleet size: basket capacities are counted against the
+        # real fleet, not the padded one.
+        n_gpus=np.asarray(events.num_gpus, np.int32),
+    )
+
+
+def init_state(events: EventTrace, st: ReplayStatics) -> Dict[str, jax.Array]:
+    """Fresh initial scan state.  Built per call and *donated* to the
+    compiled replay, so XLA aliases these buffers through the scan.
+
+    Donation invariant: after a replay returns, the state0 passed to it
+    must be treated as consumed — never read it again; build a new one
+    per call (this function is cheap: a handful of zero-fills)."""
+    T = pc.tables_for(jnp, st.models)
+    N = max(len(events.vm_pids), 1)
+    G = len(events.gpu_model_id)
+    H = len(events.cpu_cap)
+    S = events.hourly_slots or len(events.step_times)
+    NP, M = T.num_profiles, T.num_models
+
+    state0 = dict(
+        free=jnp.asarray(_gpu_full(events), jnp.int32),
+        # Per-VM row: [gpu, start, accepted].
+        vmrow=jnp.tile(jnp.asarray([-1, 0, 0], jnp.int32), (N, 1)),
+        # Per-reference-profile row: [accepted, total].
+        counts=jnp.zeros((NP, 2), jnp.int32),
+        # Per-host row: [cpu_used, ram_used].
+        host_used=jnp.zeros((H, 2), jnp.float32),
+        # Per-step row: [accepted_cum, total_cum, pms, gpus].
+        hourly=jnp.zeros((S, 4), jnp.int32),
+    )
+    need_defrag = st.policy == GRMU and st.defrag
+    need_consolidation = (st.policy == GRMU
+                          and st.consolidation_interval is not None)
+    if st.policy == GRMU:
+        ar = np.arange(G)
+        basket = np.where(ar == 0, pc.HEAVY_BASKET,
+                          np.where(ar == 1, pc.LIGHT_BASKET,
+                                   pc.POOL)).astype(np.int32)
+        basket[events.num_gpus:] = PAD_BASKET
+        state0["basket"] = jnp.asarray(basket)
+        state0["intra"] = jnp.asarray(0, jnp.int32)
+        state0["inter"] = jnp.asarray(0, jnp.int32)
+    if need_defrag:
+        state0["rej"] = jnp.asarray(False)
+    if need_consolidation:
+        state0["vm_count"] = jnp.zeros((G,), jnp.int32)
+        state0["last_cons"] = jnp.asarray(0.0, jnp.float32)
+    if st.policy == MECC:
+        state0["mecc_counts"] = jnp.zeros((M, NP), jnp.int32)
+        state0["mecc_ptr"] = jnp.asarray(0, jnp.int32)
+    return state0
 
 
 # ---------------------------------------------------------------------------
 # The scan
 # ---------------------------------------------------------------------------
 
-def _make_run(events: EventTrace, policy: int, *, defrag: bool = True,
-              consolidation_interval: Optional[float] = None,
-              defrag_trigger: str = "light",
-              mecc_window: float = 24.0) -> Callable:
-    """Build the (unjitted) replay function ``run(heavy_capacity) ->
-    dict of output arrays``.  ``policy`` and the GRMU/MECC knobs are
-    static; ``heavy_capacity`` may be traced (vmap it for Fig. 6 sweeps).
-    """
-    T = pc.tables_for(jnp, events.models)
-    G, N, H = events.num_gpus, max(events.num_vms, 1), events.num_hosts
-    M = len(events.models)
+def _kernel_pick(st: ReplayStatics, free, prof0, host_ok, mecc_w):
+    """MCC/MECC pick via the fused Pallas scoring kernels (single-model
+    fleets).  The kernel returns -1 on infeasible masks, so feasibility
+    and scoring collapse into one fused pass; the winner's assign tables
+    are then gathered for that one GPU only."""
+    from ..kernels.policy_score import (LANES, engine_ecc_scores,
+                                       engine_mcc_scores)
+    model = st.models[0]
+    interpret = (st.score_backend == "pallas_interpret"
+                 or jax.default_backend() != "tpu")
+    if st.policy == MCC:
+        cc = engine_mcc_scores(free, prof0, model=model,
+                               interpret=interpret)
+        scores = jnp.where(host_ok, cc, -1)
+    else:  # MECC — integer windowed counts as f32 weights (exact < 2^24)
+        w = mecc_w[0].astype(jnp.float32)
+        row = jnp.zeros((1, LANES), jnp.float32).at[0, :w.shape[0]].set(w)
+        ecc = engine_ecc_scores(free, prof0, row, model=model,
+                                interpret=interpret)
+        scores = jnp.where(host_ok, ecc, jnp.float32(-1))
+    return jnp.where(jnp.any(scores >= 0), jnp.argmax(scores), -1)
+
+
+def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
+             tr: Dict[str, jax.Array], heavy_capacity) -> Dict[str, jax.Array]:
+    """The whole replay as a pure function of (state0, trace, cap).
+
+    Shapes come from the arguments; ``st`` carries every static.  jit this
+    once per ``st`` — XLA's cache then keys executables on the bucket
+    shapes, and ``state0`` may be donated."""
+    T = pc.tables_for(jnp, st.models)
+    G = tr["gpu_mid"].shape[0]
+    N = state0["vmrow"].shape[0]
+    M = T.num_models
     NP = T.num_profiles
     MAXB = T.max_blocks
-    S, A = len(events.step_times), max(len(events.arr_times), 1)
-    # Which state the static config actually needs (keeps the scan body —
-    # and therefore per-event CPU dispatch — minimal).
-    need_defrag = policy == GRMU and defrag
-    need_consolidation = (policy == GRMU
-                          and consolidation_interval is not None)
+    H = state0["host_used"].shape[0]
+    A = tr["arr_times"].shape[0]
+    need_defrag = st.policy == GRMU and st.defrag
+    need_consolidation = (st.policy == GRMU
+                          and st.consolidation_interval is not None)
+    sharded = None
+    if st.num_shards:
+        from . import sharded as sharded  # lazy: avoids an import cycle
 
-    ev = dict(
-        kind=jnp.asarray(np.clip(events.kind, 0, 2)),
-        vm_index=jnp.asarray(events.vm_index),
-        profile=jnp.asarray(events.profile),
-        time=jnp.asarray(events.time),
-        idx=jnp.asarray(events.idx),
-    )
-    _vmpids = jnp.asarray(events.vm_pids) if events.num_vms else \
-        jnp.zeros((1, M), jnp.int32)
-    _vmheavy = jnp.asarray(events.vm_heavy) if events.num_vms else \
-        jnp.zeros(1, bool)
-    # Per-VM (cpu, ram) rows and per-GPU (cpu, ram) capacity rows, so host
-    # feasibility is one gather + one fused compare.
-    _vmres = jnp.stack(
-        [jnp.asarray(events.vm_cpu), jnp.asarray(events.vm_ram)], axis=1) \
-        if events.num_vms else jnp.zeros((1, 2), jnp.float32)
-    _ghost = jnp.asarray(events.gpu_host_id)
-    _gmid = jnp.asarray(events.gpu_model_id)
-    _cap_g = jnp.stack([jnp.asarray(events.cpu_cap)[_ghost],
-                        jnp.asarray(events.ram_cap)[_ghost]], axis=1)
-    _ccap = jnp.asarray(events.cpu_cap)
-    _rcap = jnp.asarray(events.ram_cap)
-    _atimes = jnp.asarray(events.arr_times) if len(events.arr_times) else \
-        jnp.zeros(1, jnp.float32)
-    _apids = jnp.asarray(events.arr_pids) if len(events.arr_times) else \
-        jnp.zeros((1, M), jnp.int32)
+    ev = dict(kind=tr["kind"], vm_index=tr["vm_index"],
+              profile=tr["profile"], time=tr["time"], idx=tr["idx"])
+    _vmpids, _vmheavy, _vmres = tr["vm_pids"], tr["vm_heavy"], tr["vm_res"]
+    _ghost, _gmid, _gfull = tr["gpu_host"], tr["gpu_mid"], tr["gpu_full"]
+    _cap_g = jnp.stack([tr["cpu_cap"][_ghost], tr["ram_cap"][_ghost]],
+                       axis=1)
+    _ccap, _rcap = tr["cpu_cap"], tr["ram_cap"]
+    _atimes, _apids = tr["arr_times"], tr["arr_pids"]
     _marange = jnp.arange(M)
     _garange = jnp.arange(G)
-    # Each GPU's all-free mask — the fleet generalization of "255".
-    _gfull = T.full_mask[_gmid]
 
-    def run(heavy_capacity):
-        heavy_cap = jnp.asarray(heavy_capacity, jnp.int32)
-        light_cap = jnp.int32(G) - heavy_cap
+    heavy_cap = jnp.asarray(heavy_capacity, jnp.int32)
+    light_cap = tr["n_gpus"].astype(jnp.int32) - heavy_cap
 
-        state0 = dict(
-            free=jnp.asarray(_gfull, jnp.int32),
-            # Per-VM row: [gpu, start, accepted].
-            vmrow=jnp.tile(jnp.asarray([-1, 0, 0], jnp.int32), (N, 1)),
-            # Per-reference-profile row: [accepted, total].
-            counts=jnp.zeros((NP, 2), jnp.int32),
-            # Per-host row: [cpu_used, ram_used].
-            host_used=jnp.zeros((H, 2), jnp.float32),
-            # Per-step row: [accepted_cum, total_cum, pms, gpus].
-            hourly=jnp.zeros((S, 4), jnp.int32),
-        )
-        if policy == GRMU:
-            state0["basket"] = jnp.where(
-                jnp.arange(G) == 0, pc.HEAVY_BASKET,
-                jnp.where(jnp.arange(G) == 1, pc.LIGHT_BASKET,
-                          pc.POOL)).astype(jnp.int32)
-            state0["intra"] = jnp.asarray(0, jnp.int32)
-            state0["inter"] = jnp.asarray(0, jnp.int32)
-        if need_defrag:
-            state0["rej"] = jnp.asarray(False)
-        if need_consolidation:
-            state0["vm_count"] = jnp.zeros((G,), jnp.int32)
-            state0["last_cons"] = jnp.asarray(0.0, jnp.float32)
-        if policy == MECC:
-            state0["mecc_counts"] = jnp.zeros((M, NP), jnp.int32)
-            state0["mecc_ptr"] = jnp.asarray(0, jnp.int32)
+    # -- arrival ---------------------------------------------------------
+    def arrival(state, e):
+        p, vi = e["profile"], e["vm_index"]
+        pids = _vmpids[vi]                              # (M,)
+        mecc_w = None
+        if st.policy == MECC:
+            # on_arrival_observed: count the arrival (once per fleet
+            # model), then expire history older than (now - window)
+            # with a two-pointer over the static observation schedule.
+            counts = state["mecc_counts"].at[_marange, pids].add(1)
+            cutoff = e["time"] - jnp.float32(st.mecc_window)
 
-        # -- arrival ---------------------------------------------------------
-        def arrival(state, e):
-            p, vi = e["profile"], e["vm_index"]
-            pids = _vmpids[vi]                              # (M,)
-            mecc_w = None
-            if policy == MECC:
-                # on_arrival_observed: count the arrival (once per fleet
-                # model), then expire history older than (now - window)
-                # with a two-pointer over the static observation schedule.
-                counts = state["mecc_counts"].at[_marange, pids].add(1)
-                cutoff = e["time"] - jnp.float32(mecc_window)
+            def cond(c):
+                ptr, _ = c
+                return (ptr < A) & (_atimes[jnp.minimum(ptr, A - 1)]
+                                    < cutoff)
 
-                def cond(c):
-                    ptr, _ = c
-                    return (ptr < A) & (_atimes[jnp.minimum(ptr, A - 1)]
-                                        < cutoff)
+            def body(c):
+                ptr, cnt = c
+                return ptr + 1, cnt.at[_marange, _apids[ptr]].add(-1)
 
-                def body(c):
-                    ptr, cnt = c
-                    return ptr + 1, cnt.at[_marange, _apids[ptr]].add(-1)
+            ptr, counts = jax.lax.while_loop(
+                cond, body, (state["mecc_ptr"], counts))
+            state = dict(state, mecc_counts=counts, mecc_ptr=ptr)
+            mecc_w = pc.mecc_weights(jnp, counts)
 
-                ptr, counts = jax.lax.while_loop(
-                    cond, body, (state["mecc_ptr"], counts))
-                state = dict(state, mecc_counts=counts, mecc_ptr=ptr)
-                mecc_w = pc.mecc_weights(jnp, counts)
-
-            need = _vmres[vi]                               # (2,) cpu, ram
-            host_ok = jnp.all(state["host_used"][_ghost] + need <= _cap_g,
-                              axis=1)
-            if policy == GRMU:
-                heavy = _vmheavy[vi]
+        need = _vmres[vi]                               # (2,) cpu, ram
+        host_ok = jnp.all(state["host_used"][_ghost] + need <= _cap_g,
+                          axis=1)
+        if st.policy == GRMU:
+            heavy = _vmheavy[vi]
+            if st.num_shards:
+                pick, grew, grow_idx = sharded.grmu_select_sharded(
+                    T, _gmid, state["free"], pids, heavy, host_ok,
+                    state["basket"], heavy_cap, light_cap,
+                    st.axis_name, st.num_shards)
+            else:
                 pick, grew, grow_idx = pc.grmu_select(
                     jnp, T, _gmid, state["free"], pids, heavy, host_ok,
                     state["basket"], heavy_cap, light_cap)
-                want = jnp.where(heavy, pc.HEAVY_BASKET, pc.LIGHT_BASKET)
-                basket = jnp.where(
-                    grew, state["basket"].at[grow_idx].set(want),
-                    state["basket"])
-                state = dict(state, basket=basket)
-            else:
-                pick = pc.select_gpu(policy, jnp, T, _gmid, state["free"],
-                                     pids, host_ok, mecc_w)
-            ok = pick >= 0
-            okc = ok.astype(jnp.int32)
-            g = jnp.maximum(pick, 0)
-            mask = state["free"][g]
-            p_g = pids[_gmid[g]]      # profile under the chosen GPU's model
-            row = jnp.stack([jnp.where(ok, pick, -1),
-                             jnp.where(ok, T.assign_start[_gmid[g], mask,
-                                                          p_g], 0),
-                             okc])
-            state = dict(
-                state,
-                free=state["free"].at[g].set(
-                    jnp.where(ok, T.assign_mask[_gmid[g], mask, p_g],
-                              mask)),
-                vmrow=state["vmrow"].at[vi].set(row),
-                counts=state["counts"].at[p].add(jnp.stack([okc, 1])),
-                host_used=state["host_used"].at[_ghost[g]].add(
-                    jnp.where(ok, need, jnp.float32(0.0))),
-            )
-            if need_consolidation:
-                state = dict(state,
-                             vm_count=state["vm_count"].at[g].add(okc))
-            if need_defrag:
-                rej = (~ok & ~_vmheavy[vi]
-                       if defrag_trigger == "light" else ~ok)
-                state = dict(state, rej=state["rej"] | rej)
-            return state
+            want = jnp.where(heavy, pc.HEAVY_BASKET, pc.LIGHT_BASKET)
+            basket = jnp.where(
+                grew, state["basket"].at[grow_idx].set(want),
+                state["basket"])
+            state = dict(state, basket=basket)
+        elif st.num_shards:
+            pick = sharded.select_gpu_sharded(
+                st.policy, T, _gmid, state["free"], pids, host_ok,
+                mecc_w, st.axis_name, st.num_shards)
+        elif st.score_backend != "tables":
+            pick = _kernel_pick(st, state["free"], pids[0], host_ok,
+                                mecc_w)
+        else:
+            pick = pc.select_gpu(st.policy, jnp, T, _gmid, state["free"],
+                                 pids, host_ok, mecc_w)
+        ok = pick >= 0
+        okc = ok.astype(jnp.int32)
+        g = jnp.maximum(pick, 0)
+        mask = state["free"][g]
+        p_g = pids[_gmid[g]]      # profile under the chosen GPU's model
+        row = jnp.stack([jnp.where(ok, pick, -1),
+                         jnp.where(ok, T.assign_start[_gmid[g], mask,
+                                                      p_g], 0),
+                         okc])
+        state = dict(
+            state,
+            free=state["free"].at[g].set(
+                jnp.where(ok, T.assign_mask[_gmid[g], mask, p_g],
+                          mask)),
+            vmrow=state["vmrow"].at[vi].set(row),
+            counts=state["counts"].at[p].add(jnp.stack([okc, 1])),
+            host_used=state["host_used"].at[_ghost[g]].add(
+                jnp.where(ok, need, jnp.float32(0.0))),
+        )
+        if need_consolidation:
+            state = dict(state,
+                         vm_count=state["vm_count"].at[g].add(okc))
+        if need_defrag:
+            rej = (~ok & ~_vmheavy[vi]
+                   if st.defrag_trigger == "light" else ~ok)
+            state = dict(state, rej=state["rej"] | rej)
+        return state
 
-        # -- departure --------------------------------------------------------
-        def departure(state, e):
-            vi = e["vm_index"]
-            r = state["vmrow"][vi]
-            gpu, start = r[0], r[1]
-            ok = gpu >= 0
-            okc = ok.astype(jnp.int32)
-            g = jnp.maximum(gpu, 0)
-            p_g = _vmpids[vi, _gmid[g]]
-            blocks = ((jnp.int32(1) << T.sizes[_gmid[g], p_g]) - 1) << start
-            state = dict(
-                state,
-                free=state["free"].at[g].set(
-                    jnp.where(ok, state["free"][g] | blocks,
-                              state["free"][g])),
-                vmrow=state["vmrow"].at[vi, 0].set(-1),
-                host_used=state["host_used"].at[_ghost[g]].add(
-                    jnp.where(ok, -_vmres[vi], jnp.float32(0.0))),
-            )
-            if need_consolidation:
-                state = dict(state,
-                             vm_count=state["vm_count"].at[g].add(-okc))
-            return state
+    # -- departure --------------------------------------------------------
+    def departure(state, e):
+        vi = e["vm_index"]
+        r = state["vmrow"][vi]
+        gpu, start = r[0], r[1]
+        ok = gpu >= 0
+        okc = ok.astype(jnp.int32)
+        g = jnp.maximum(gpu, 0)
+        p_g = _vmpids[vi, _gmid[g]]
+        blocks = ((jnp.int32(1) << T.sizes[_gmid[g], p_g]) - 1) << start
+        state = dict(
+            state,
+            free=state["free"].at[g].set(
+                jnp.where(ok, state["free"][g] | blocks,
+                          state["free"][g])),
+            vmrow=state["vmrow"].at[vi, 0].set(-1),
+            host_used=state["host_used"].at[_ghost[g]].add(
+                jnp.where(ok, -_vmres[vi], jnp.float32(0.0))),
+        )
+        if need_consolidation:
+            state = dict(state,
+                         vm_count=state["vm_count"].at[g].add(-okc))
+        return state
 
-        # -- GRMU step-end operations ----------------------------------------
-        def do_defrag(state):
-            light = state["basket"] == pc.LIGHT_BASKET
-            tgt = pc.defrag_target(jnp, T, _gmid, state["free"], light)
-            do = tgt >= 0
-            g = jnp.maximum(tgt, 0)
-            mid_g = _gmid[g]
-            on_g = state["vmrow"][:, 0] == g
-            vm_start = state["vmrow"][:, 1]
-            prof_blk, vi_blk = [], []
-            for b in range(MAXB):
-                sel = on_g & (vm_start == b)
-                has = sel.any()
-                vi = jnp.argmax(sel)
-                prof_blk.append(jnp.where(has, _vmpids[vi, mid_g], -1))
-                vi_blk.append(jnp.where(has, vi, N))
-            prof_blk = jnp.stack(prof_blk)
-            vi_blk = jnp.stack(vi_blk)
-            starts, ok, final_mask, moved = pc.repack_gpu(jnp, T, mid_g,
-                                                          prof_blk)
-            apply = do & ok & (moved > 0)
-            cur = vm_start[jnp.clip(vi_blk, 0, N - 1)]
-            vals = jnp.where(apply & (starts >= 0), starts, cur)
-            return dict(
-                state,
-                free=state["free"].at[g].set(
-                    jnp.where(apply, final_mask, state["free"][g])),
-                vmrow=state["vmrow"].at[vi_blk, 1].set(vals, mode="drop"),
-                intra=state["intra"] + jnp.where(apply, moved, 0),
-            )
-
-        def do_consolidate(state):
-            free, basket = state["free"], state["basket"]
-            vm_gpu = state["vmrow"][:, 0]
-            # Sole resident per GPU (valid only where vm_count == 1).
-            owner = jnp.full(G + 1, -1, jnp.int32).at[
-                jnp.where(vm_gpu >= 0, vm_gpu, G)
-            ].set(jnp.arange(N, dtype=jnp.int32))[:G]
-            owner_c = jnp.clip(owner, 0, N - 1)
-            # The sole VM mapped onto every fleet model, (G, M); and onto
-            # its own GPU's model, (G,).
-            sole_pids = jnp.where((owner >= 0)[:, None], _vmpids[owner_c],
-                                  -1)
-            sole_own = sole_pids[_garange, _gmid]
-            sole_res = jnp.where((owner >= 0)[:, None], _vmres[owner_c],
-                                 jnp.float32(0.0))
-            cand = pc.consolidation_candidates(
-                jnp, T, _gmid, free, basket == pc.LIGHT_BASKET,
-                state["vm_count"], sole_own)
-            tgt_of, cpu_used, ram_used = pc.consolidation_plan(
-                jnp, T, _gmid, free, cand, sole_pids, sole_res[:, 0],
-                sole_res[:, 1], _ghost, state["host_used"][:, 0],
-                state["host_used"][:, 1], _ccap, _rcap)
-            valid = tgt_of >= 0
-            tgt_c = jnp.clip(tgt_of, 0, G - 1)
-            # Each source's profile under its *target's* model.
-            p_tgt = jnp.clip(sole_pids[_garange, _gmid[tgt_c]], 0, NP - 1)
-            starts = T.assign_start[_gmid[tgt_c], free[tgt_c], p_tgt]
-            # Scatter receive side: each target gets exactly one source
-            # (profile already expressed in the target's own model).
-            recv_idx = jnp.where(valid, tgt_of, G)
-            recv_p = jnp.full(G + 1, -1, jnp.int32).at[recv_idx].set(
-                jnp.where(valid, p_tgt, -1))[:G]
-            recv_pc = jnp.clip(recv_p, 0, NP - 1)
-            new_free = jnp.where(valid, _gfull, free)
-            new_free = jnp.where(recv_p >= 0,
-                                 T.assign_mask[_gmid, free, recv_pc],
-                                 new_free)
-            vi = jnp.where(valid, owner, N)
-            vmrow = state["vmrow"].at[vi, 0].set(tgt_of, mode="drop")
-            vmrow = vmrow.at[vi, 1].set(starts, mode="drop")
-            return dict(
-                state,
-                free=new_free,
-                basket=jnp.where(valid, pc.POOL, basket),
-                vmrow=vmrow,
-                vm_count=jnp.where(valid, 0, state["vm_count"])
-                + (recv_p >= 0).astype(jnp.int32),
-                host_used=jnp.stack([cpu_used, ram_used], axis=1),
-                inter=state["inter"] + valid.sum().astype(jnp.int32),
-            )
-
-        # -- step end ----------------------------------------------------------
-        def step_end(state, e):
-            if need_defrag:
-                state = jax.lax.cond(state["rej"], do_defrag, lambda s: s,
-                                     state)
-                state = dict(state, rej=jnp.asarray(False))
-            if need_consolidation:
-                due = (e["time"] - state["last_cons"]
-                       >= jnp.float32(consolidation_interval))
-                state = jax.lax.cond(due, do_consolidate, lambda s: s,
-                                     state)
-                state = dict(state, last_cons=jnp.where(
-                    due, e["time"], state["last_cons"]))
-            gpu_active = (state["free"] != _gfull).astype(jnp.int32)
-            pms = (jax.ops.segment_sum(gpu_active, _ghost,
-                                       num_segments=H) > 0)
-            sample = jnp.stack([state["counts"][:, 0].sum(),
-                                state["counts"][:, 1].sum(),
-                                pms.sum().astype(jnp.int32),
-                                gpu_active.sum()])
-            return dict(state,
-                        hourly=state["hourly"].at[e["idx"]].set(sample))
-
-        def step(state, e):
-            state = jax.lax.switch(
-                e["kind"],
-                [departure, arrival, step_end],
-                state, e)
-            return state, None
-
-        final, _ = jax.lax.scan(step, state0, ev)
-        zero = jnp.asarray(0, jnp.int32)
+    # -- GRMU step-end operations ----------------------------------------
+    def do_defrag(state):
+        light = state["basket"] == pc.LIGHT_BASKET
+        tgt = pc.defrag_target(jnp, T, _gmid, state["free"], light)
+        do = tgt >= 0
+        g = jnp.maximum(tgt, 0)
+        mid_g = _gmid[g]
+        on_g = state["vmrow"][:, 0] == g
+        vm_start = state["vmrow"][:, 1]
+        prof_blk, vi_blk = [], []
+        for b in range(MAXB):
+            sel = on_g & (vm_start == b)
+            has = sel.any()
+            vi = jnp.argmax(sel)
+            prof_blk.append(jnp.where(has, _vmpids[vi, mid_g], -1))
+            vi_blk.append(jnp.where(has, vi, N))
+        prof_blk = jnp.stack(prof_blk)
+        vi_blk = jnp.stack(vi_blk)
+        starts, ok, final_mask, moved = pc.repack_gpu(jnp, T, mid_g,
+                                                      prof_blk)
+        apply = do & ok & (moved > 0)
+        cur = vm_start[jnp.clip(vi_blk, 0, N - 1)]
+        vals = jnp.where(apply & (starts >= 0), starts, cur)
         return dict(
-            accepted=final["counts"][:, 0], total=final["counts"][:, 1],
-            vm_accepted=final["vmrow"][:, 2] > 0,
-            h_acc=final["hourly"][:, 0], h_tot=final["hourly"][:, 1],
-            h_pms=final["hourly"][:, 2], h_gpus=final["hourly"][:, 3],
-            intra=final.get("intra", zero), inter=final.get("inter", zero),
+            state,
+            free=state["free"].at[g].set(
+                jnp.where(apply, final_mask, state["free"][g])),
+            vmrow=state["vmrow"].at[vi_blk, 1].set(vals, mode="drop"),
+            intra=state["intra"] + jnp.where(apply, moved, 0),
         )
 
-    return run
+    def do_consolidate(state):
+        free, basket = state["free"], state["basket"]
+        vm_gpu = state["vmrow"][:, 0]
+        # Sole resident per GPU (valid only where vm_count == 1).
+        owner = jnp.full(G + 1, -1, jnp.int32).at[
+            jnp.where(vm_gpu >= 0, vm_gpu, G)
+        ].set(jnp.arange(N, dtype=jnp.int32))[:G]
+        owner_c = jnp.clip(owner, 0, N - 1)
+        # The sole VM mapped onto every fleet model, (G, M); and onto
+        # its own GPU's model, (G,).
+        sole_pids = jnp.where((owner >= 0)[:, None], _vmpids[owner_c],
+                              -1)
+        sole_own = sole_pids[_garange, _gmid]
+        sole_res = jnp.where((owner >= 0)[:, None], _vmres[owner_c],
+                             jnp.float32(0.0))
+        cand = pc.consolidation_candidates(
+            jnp, T, _gmid, free, basket == pc.LIGHT_BASKET,
+            state["vm_count"], sole_own)
+        tgt_of, cpu_used, ram_used = pc.consolidation_plan(
+            jnp, T, _gmid, free, cand, sole_pids, sole_res[:, 0],
+            sole_res[:, 1], _ghost, state["host_used"][:, 0],
+            state["host_used"][:, 1], _ccap, _rcap)
+        valid = tgt_of >= 0
+        tgt_c = jnp.clip(tgt_of, 0, G - 1)
+        # Each source's profile under its *target's* model.
+        p_tgt = jnp.clip(sole_pids[_garange, _gmid[tgt_c]], 0, NP - 1)
+        starts = T.assign_start[_gmid[tgt_c], free[tgt_c], p_tgt]
+        # Scatter receive side: each target gets exactly one source
+        # (profile already expressed in the target's own model).
+        recv_idx = jnp.where(valid, tgt_of, G)
+        recv_p = jnp.full(G + 1, -1, jnp.int32).at[recv_idx].set(
+            jnp.where(valid, p_tgt, -1))[:G]
+        recv_pc = jnp.clip(recv_p, 0, NP - 1)
+        new_free = jnp.where(valid, _gfull, free)
+        new_free = jnp.where(recv_p >= 0,
+                             T.assign_mask[_gmid, free, recv_pc],
+                             new_free)
+        vi = jnp.where(valid, owner, N)
+        vmrow = state["vmrow"].at[vi, 0].set(tgt_of, mode="drop")
+        vmrow = vmrow.at[vi, 1].set(starts, mode="drop")
+        return dict(
+            state,
+            free=new_free,
+            basket=jnp.where(valid, pc.POOL, basket),
+            vmrow=vmrow,
+            vm_count=jnp.where(valid, 0, state["vm_count"])
+            + (recv_p >= 0).astype(jnp.int32),
+            host_used=jnp.stack([cpu_used, ram_used], axis=1),
+            inter=state["inter"] + valid.sum().astype(jnp.int32),
+        )
+
+    # -- step end ----------------------------------------------------------
+    def step_end(state, e):
+        if need_defrag:
+            state = jax.lax.cond(state["rej"], do_defrag, lambda s: s,
+                                 state)
+            state = dict(state, rej=jnp.asarray(False))
+        if need_consolidation:
+            due = (e["time"] - state["last_cons"]
+                   >= jnp.float32(st.consolidation_interval))
+            state = jax.lax.cond(due, do_consolidate, lambda s: s,
+                                 state)
+            state = dict(state, last_cons=jnp.where(
+                due, e["time"], state["last_cons"]))
+        gpu_active = (state["free"] != _gfull).astype(jnp.int32)
+        pms = (jax.ops.segment_sum(gpu_active, _ghost,
+                                   num_segments=H) > 0)
+        sample = jnp.stack([state["counts"][:, 0].sum(),
+                            state["counts"][:, 1].sum(),
+                            pms.sum().astype(jnp.int32),
+                            gpu_active.sum()])
+        return dict(state,
+                    hourly=state["hourly"].at[e["idx"]].set(sample))
+
+    # -- padding -----------------------------------------------------------
+    def pad_noop(state, e):
+        return state
+
+    def step(state, e):
+        state = jax.lax.switch(
+            e["kind"],
+            [departure, arrival, step_end, pad_noop],
+            state, e)
+        return state, None
+
+    final, _ = jax.lax.scan(step, state0, ev)
+    zero = jnp.asarray(0, jnp.int32)
+    return dict(
+        accepted=final["counts"][:, 0], total=final["counts"][:, 1],
+        vm_accepted=final["vmrow"][:, 2] > 0,
+        h_acc=final["hourly"][:, 0], h_tot=final["hourly"][:, 1],
+        h_pms=final["hourly"][:, 2], h_gpus=final["hourly"][:, 3],
+        intra=final.get("intra", zero), inter=final.get("inter", zero),
+    )
+
+
+def _jitted_run(st: ReplayStatics) -> Callable:
+    """One donating jitted scan per statics value (process-level cache);
+    XLA's jit cache then holds one executable per bucket shape."""
+    def build():
+        return jax.jit(functools.partial(_scan_fn, st),
+                       donate_argnums=(0,))
+    return compile_cache.cached_replay_fn(st, build)
 
 
 def default_heavy_capacity(events: EventTrace,
@@ -524,8 +796,21 @@ def default_heavy_capacity(events: EventTrace,
 
 
 def make_replay(events: EventTrace, policy: int, **cfg) -> Callable:
-    """Jit-compiled ``run(heavy_capacity) -> dict of output arrays``."""
-    return jax.jit(_make_run(events, policy, **cfg))
+    """Jit-compiled ``run(heavy_capacity) -> dict of output arrays``.
+
+    The compiled executable is shared across traces with the same bucket
+    shapes and (policy, cfg, model-set) — replaying a new trace from an
+    already-seen bucket skips XLA entirely."""
+    compile_cache.ensure_persistent_cache()
+    st = replay_statics(events, policy, **cfg)
+    jfn = _jitted_run(st)
+    tr = {k: jnp.asarray(v) for k, v in trace_arrays(events).items()}
+
+    def run(heavy_capacity):
+        return jfn(init_state(events, st), tr,
+                   jnp.asarray(heavy_capacity, jnp.int32))
+
+    return run
 
 
 def replay(events: EventTrace, policy: int,
@@ -533,7 +818,9 @@ def replay(events: EventTrace, policy: int,
     """Replay the trace under ``policy`` and return a full ``SimResult``
     (same fields the sequential engine fills).  ``heavy_capacity`` is only
     used by GRMU; GRMU knobs (``defrag``, ``consolidation_interval``,
-    ``defrag_trigger``) and MECC's ``mecc_window`` pass through ``cfg``."""
+    ``defrag_trigger``), MECC's ``mecc_window`` and the scoring backend
+    (``score_backend``: auto|tables|pallas|pallas_interpret) pass through
+    ``cfg``."""
     if heavy_capacity is None:
         heavy_capacity = default_heavy_capacity(events)
     out = jax.device_get(make_replay(events, policy, **cfg)(heavy_capacity))
@@ -543,7 +830,8 @@ def replay(events: EventTrace, policy: int,
 def result_from_arrays(events: EventTrace, policy: int, out: dict
                        ) -> SimResult:
     """Assemble a SimResult from ``run``'s output arrays (host side, in
-    float64, exactly how the sequential engine derives its series)."""
+    float64, exactly how the sequential engine derives its series).
+    Slices every padded buffer back to the trace's logical sizes."""
     ref_profiles = events.models[0].profiles
     accepted = np.asarray(out["accepted"], np.int64)
     total = np.asarray(out["total"], np.int64)
@@ -555,14 +843,16 @@ def result_from_arrays(events: EventTrace, policy: int, out: dict
     for i, p in enumerate(ref_profiles):
         res.per_profile_total[p.name] = int(total[i])
         res.per_profile_accepted[p.name] = int(accepted[i])
+    S = len(events.step_times)
     res.hourly_times = [float(t) for t in events.step_times]
-    h_acc = np.asarray(out["h_acc"], np.int64)
-    h_tot = np.asarray(out["h_tot"], np.int64)
+    h_acc = np.asarray(out["h_acc"], np.int64)[:S]
+    h_tot = np.asarray(out["h_tot"], np.int64)[:S]
     res.hourly_acceptance = [int(a) / max(1, int(t))
                              for a, t in zip(h_acc, h_tot)]
     denom = events.num_hosts + events.num_gpus
     res.hourly_active_hw = [(int(p) + int(g)) / denom
-                            for p, g in zip(out["h_pms"], out["h_gpus"])]
+                            for p, g in zip(out["h_pms"][:S],
+                                            out["h_gpus"][:S])]
     res.intra_migrations = int(out["intra"])
     res.inter_migrations = int(out["inter"])
     res.migrations = res.intra_migrations + res.inter_migrations
@@ -580,14 +870,20 @@ def sweep_heavy_capacity(events: EventTrace, fracs: np.ndarray,
     Returns (len(fracs), num_profiles) accepted-per-reference-profile."""
     cfg.setdefault("defrag", False)
     cfg.setdefault("consolidation_interval", None)
+    st = replay_statics(events, GRMU, **cfg)
     caps = jnp.asarray(np.round(
         np.asarray(fracs) * events.num_gpus).astype(np.int32))
-    run = _make_run(events, GRMU, **cfg)
-    fn = jax.jit(jax.vmap(lambda c: run(c)["accepted"]))
+    tr = {k: jnp.asarray(v) for k, v in trace_arrays(events).items()}
+    s0 = init_state(events, st)
+    fn = jax.jit(jax.vmap(
+        lambda c: _scan_fn(st, s0, tr, c)["accepted"]))
     return np.asarray(fn(caps))
 
 
-__all__ = ["EventTrace", "build_events", "make_replay", "replay",
-           "result_from_arrays", "sweep_heavy_capacity",
-           "default_heavy_capacity",
-           "FF", "BF", "MCC", "MECC", "GRMU"]
+__all__ = ["EventTrace", "build_events", "build_events_arrays",
+           "make_replay", "replay", "result_from_arrays",
+           "sweep_heavy_capacity", "default_heavy_capacity",
+           "trace_arrays", "init_state", "replay_statics",
+           "ReplayStatics", "step_grid",
+           "FF", "BF", "MCC", "MECC", "GRMU",
+           "DEPARTURE", "ARRIVAL", "STEP_END", "PAD", "PAD_BASKET"]

@@ -65,17 +65,27 @@ def _ecc_kernel(model: DeviceModel, profile_idx: int, mask_ref, probs_ref,
     out_ref[...] = jnp.where(best_cc >= 0, ecc, -1.0)
 
 
+def _block_rows(rows: int) -> int:
+    """Largest tile height <= BLOCK_ROWS that divides ``rows`` (any
+    power-of-two row count down to 1 works — bucketed fleets are pow2)."""
+    br = min(BLOCK_ROWS, rows)
+    while rows % br:
+        br -= 1
+    return br
+
+
 def mcc_score_pallas(masks2d: jax.Array, profile_idx: int, *,
                      model: DeviceModel = A100_40GB,
                      interpret: bool = False) -> jax.Array:
     rows, lanes = masks2d.shape
-    assert lanes == LANES and rows % BLOCK_ROWS == 0
-    grid = (rows // BLOCK_ROWS,)
+    assert lanes == LANES
+    br = _block_rows(rows)
+    grid = (rows // br,)
     return pl.pallas_call(
         functools.partial(_mcc_kernel, model, profile_idx),
         grid=grid,
-        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0))],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),
+        in_specs=[pl.BlockSpec((br, LANES), lambda r: (r, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
         interpret=interpret,
     )(masks2d)
@@ -87,20 +97,64 @@ def ecc_score_pallas(masks2d: jax.Array, profile_idx: int,
                      interpret: bool = False) -> jax.Array:
     """probs_row: (1, 128) f32, first num_profiles lanes = probabilities."""
     rows, lanes = masks2d.shape
-    assert lanes == LANES and rows % BLOCK_ROWS == 0
+    assert lanes == LANES
     assert probs_row.shape == (1, LANES)
-    grid = (rows // BLOCK_ROWS,)
+    br = _block_rows(rows)
+    grid = (rows // br,)
     return pl.pallas_call(
         functools.partial(_ecc_kernel, model, profile_idx),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),
+            pl.BlockSpec((br, LANES), lambda r: (r, 0)),
             pl.BlockSpec((1, LANES), lambda r: (0, 0)),  # broadcast row
         ],
-        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda r: (r, 0)),
+        out_specs=pl.BlockSpec((br, LANES), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
         interpret=interpret,
     )(masks2d, probs_row)
 
 
-__all__ = ["mcc_score_pallas", "ecc_score_pallas", "BLOCK_ROWS", "LANES"]
+# ---------------------------------------------------------------------------
+# Engine entry points (repro.core.batched score_backend="pallas")
+# ---------------------------------------------------------------------------
+#
+# Inside the replay scan the requested profile is a *traced* scalar while
+# the kernels specialize per profile at compile time; the bridge is a
+# ``lax.switch`` over the <= 6 per-profile kernel specializations.  The
+# fleet's flat (G,) free-mask vector is viewed as (G/128, 128) — bucketed
+# fleets (pad_events(min_gpus=128)) are always lane-aligned.
+
+def engine_mcc_scores(free: jax.Array, profile, *,
+                      model: DeviceModel = A100_40GB,
+                      interpret: bool = False) -> jax.Array:
+    """Per-GPU best post-assignment CC for a traced ``profile`` scalar;
+    -1 where the profile does not fit (Alg. 6's maximization target)."""
+    G = free.shape[0]
+    masks2d = free.astype(jnp.int32).reshape(G // LANES, LANES)
+    branches = [
+        functools.partial(mcc_score_pallas, profile_idx=p, model=model,
+                          interpret=interpret)
+        for p in range(model.num_profiles)]
+    out = jax.lax.switch(jnp.clip(profile, 0, model.num_profiles - 1),
+                         branches, masks2d)
+    return out.reshape(G)
+
+
+def engine_ecc_scores(free: jax.Array, profile, probs_row: jax.Array, *,
+                      model: DeviceModel = A100_40GB,
+                      interpret: bool = False) -> jax.Array:
+    """Per-GPU expectation-weighted capacity after the default-policy
+    assignment of a traced ``profile``; -1.0 where infeasible (Alg. 7)."""
+    G = free.shape[0]
+    masks2d = free.astype(jnp.int32).reshape(G // LANES, LANES)
+    branches = [
+        (lambda m, pr, p=p: ecc_score_pallas(m, p, pr, model=model,
+                                             interpret=interpret))
+        for p in range(model.num_profiles)]
+    out = jax.lax.switch(jnp.clip(profile, 0, model.num_profiles - 1),
+                         branches, masks2d, probs_row)
+    return out.reshape(G)
+
+
+__all__ = ["mcc_score_pallas", "ecc_score_pallas", "engine_mcc_scores",
+           "engine_ecc_scores", "BLOCK_ROWS", "LANES"]

@@ -1,0 +1,94 @@
+"""Sharded-fleet replay (shard_map + cross-shard reconcile) parity.
+
+The sharded engine must be decision-for-decision identical to the
+single-shard scan: the per-arrival reconcile (argmax over per-shard best
+scores, min over per-shard first fits) provably picks the same GPU, so
+every downstream state update is the same.  K=1 runs in-process on the
+default device; K=4 needs virtual host devices, which only exist when
+``XLA_FLAGS=--xla_force_host_platform_device_count`` is set before jax
+initializes — that case runs in a subprocess.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.core import batched as B
+from repro.core import sharded as SH
+from repro.core.bucketing import pad_events
+from test_equivalence import hetero_scenario
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("policy,kw", [
+    ("FF", {}),
+    ("GRMU", dict(defrag=True, consolidation_interval=6.0)),
+])
+def test_sharded_k1_matches_single_shard(policy, kw):
+    """K=1 exercises the whole sharded code path (axis_index slicing,
+    all_gather reconcile) without virtual devices."""
+    pid = {"FF": B.FF, "GRMU": B.GRMU}[policy]
+    cluster, vms = hetero_scenario(0)
+    pv = pad_events(B.build_events(vms, cluster), shards=1)
+    cap = B.default_heavy_capacity(pv)
+    r0 = B.replay(pv, pid, cap, **kw)
+    r1 = SH.replay_sharded(pv, pid, cap, num_shards=1, **kw)
+    assert r1.accepted_ids == r0.accepted_ids
+    assert r1.hourly_active_hw == r0.hourly_active_hw
+    assert r1.migrations == r0.migrations
+
+
+def test_sharded_requires_divisible_fleet():
+    cluster, vms = hetero_scenario(0)
+    ev = B.build_events(vms, cluster)        # 12 GPUs, not bucketed
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    with pytest.raises(ValueError, match="shards"):
+        SH.make_sharded_replay(ev, B.FF, num_shards=len(jax.devices())
+                               if len(ev.gpu_model_id)
+                               % len(jax.devices()) else 8)
+
+
+_K4_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, "tests")
+    from test_equivalence import hetero_scenario
+    from repro.core import batched as B
+    from repro.core import sharded as SH
+    from repro.core.bucketing import pad_events
+    import jax
+    assert len(jax.devices()) == 4, jax.devices()
+    cluster, vms = hetero_scenario(0)
+    pv = pad_events(B.build_events(vms, cluster), shards=4)
+    cap = B.default_heavy_capacity(pv)
+    for pid, kw in ((B.FF, {}), (B.MECC, {}),
+                    (B.GRMU, dict(defrag=True,
+                                  consolidation_interval=6.0))):
+        r0 = B.replay(pv, pid, cap, **kw)
+        r1 = SH.replay_sharded(pv, pid, cap, num_shards=4, **kw)
+        assert r0.accepted_ids == r1.accepted_ids, pid
+        assert r0.hourly_active_hw == r1.hourly_active_hw, pid
+        assert r0.migrations == r1.migrations, pid
+    print("K4_PARITY_OK")
+""")
+
+
+def test_sharded_k4_matches_single_shard_subprocess():
+    """Real 4-way sharding on virtual host devices (fresh process so the
+    XLA flag lands before jax init).  Covers the reconcile paths with
+    actual cross-device all_gathers: scored (MECC) and first-fit+growth
+    (GRMU)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4"
+                        ).strip()
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", _K4_SCRIPT],
+                          capture_output=True, text=True, cwd=REPO,
+                          timeout=480, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "K4_PARITY_OK" in proc.stdout
