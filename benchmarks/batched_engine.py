@@ -1,13 +1,24 @@
 """Hyperscale replay ladder: bucketed batched engine vs the references.
 
 Runs a scale ladder (``BENCH_LADDER``, default
-``alibaba:0.1,alibaba:1.0,synth:1000000x10000``) through the bucketed
+``alibaba:0.1,alibaba:1.0,synth:1000000x10000``; ``BENCH_HEAVY=1``
+appends the heavy ``synth:10000000x100000`` rung) through the bucketed
 replay engine and writes ``BENCH_batched_engine.json`` with, per rung:
-steady-state events/sec, cold-compile cost, and — for rungs small enough
-to replay twice — the *compile amortization ratio*: a second trace from
-the same shape bucket must land in the jit cache, so its first-call
-overhead should be a few percent of the cold compile (acceptance bar:
-<= 5%).
+steady-state events/sec, cold-compile cost, per-rung **peak RSS** and
+packed trace / resident / per-chunk device bytes, and — for rungs small
+enough to replay twice — the *compile amortization ratio*: a second
+trace from the same shape bucket must land in the jit cache, so its
+first-call overhead should be a few percent of the cold compile
+(acceptance bar: <= 5%).
+
+Synthetic rungs replay through the **chunk-streaming** engine
+(``repro.core.streaming``): the packed event stream is scanned in
+fixed-size chunks with a donated carry, so only O(chunk) trace bytes
+are resident — the 10M-VM / 100k-GPU rung's enabling mechanism.  Rungs
+small enough to also run the unchunked scan additionally assert
+chunked-vs-unchunked decision parity (``chunked_matches_unchunked``
+per rung, ``chunked_decisions_match`` top-level — gated by
+``benchmarks/check_perf.py`` alongside the peak-RSS regression check).
 
 The base (first Alibaba) rung additionally checks decisions against the
 sequential Python engine, and — when more than one XLA device is visible
@@ -19,7 +30,7 @@ policies through the sharded shard_map path and asserts decision parity
 The JSON keeps the legacy top-level keys (CI's regression gate,
 ``benchmarks/check_perf.py``, compares them against the committed
 baseline) and appends a ``history`` entry (git sha, events/sec, peak
-fleet size) per run, preserving prior entries.
+fleet size, peak RSS) per run, preserving prior entries.
 """
 from __future__ import annotations
 
@@ -32,21 +43,31 @@ import numpy as np
 
 from repro.core import batched as B
 from repro.core import compile_cache
+from repro.core import streaming as S
 from repro.core.bucketing import bucket_shape, pad_events
 from repro.core.grmu import GRMU
 from repro.sim.engine import simulate
 from repro.workload.alibaba import TraceConfig, generate
 from repro.workload.synthetic import SyntheticConfig, generate_events
 
-from .common import emit, timed
+from .common import emit, peak_rss_bytes, reset_peak_rss, timed
 
-LADDER = os.environ.get(
-    "BENCH_LADDER", "alibaba:0.1,alibaba:1.0,synth:1000000x10000")
+_DEFAULT_LADDER = "alibaba:0.1,alibaba:1.0,synth:1000000x10000"
+if os.environ.get("BENCH_HEAVY"):
+    # The heavy rung: ~20M packed event rows streamed through the
+    # chunked scan.  Hours of host-CPU scan time — never in CI's tier-1
+    # path, only behind the explicit env gate.
+    _DEFAULT_LADDER += ",synth:10000000x100000"
+LADDER = os.environ.get("BENCH_LADDER", _DEFAULT_LADDER)
 OUT_PATH = os.environ.get("BENCH_JSON", "BENCH_batched_engine.json")
 # Rungs with more (logical) events than this skip the second-trace
-# amortization replay (it costs one full extra run).
+# amortization replay and the unchunked parity replay (each costs one
+# full extra run).
 AMORTIZE_MAX_EVENTS = int(os.environ.get("BENCH_AMORTIZE_MAX_EVENTS",
                                          "300000"))
+# Streaming chunk length for synthetic rungs (halved for small rungs so
+# the stream spans >= ~8 chunks and actually exercises the path).
+CHUNK_EVENTS = int(os.environ.get("BENCH_CHUNK_EVENTS", "65536"))
 GRMU_KW = dict(defrag=False, consolidation_interval=None)
 
 
@@ -81,20 +102,39 @@ def _timed_replay(fn, cap):
     return out, (time.perf_counter() - t0) * 1e6
 
 
+def _chunk_for(n_events: int) -> int:
+    c = CHUNK_EVENTS
+    while c > 2048 and c * 8 > max(n_events, 1):
+        c //= 2
+    return c
+
+
 def _bench_rung(spec: str) -> dict:
+    reset_peak_rss()                 # per-rung peak (build + replay)
     ev_a, _ = _events_for(spec, seed=1)
     n_events = len(ev_a.kind)
     amortize = n_events <= AMORTIZE_MAX_EVENTS
     ev_b = _events_for(spec, seed=2)[0] if amortize else None
+    chunked = spec.startswith("synth:")
 
     # Joint bucket: both traces must land in ONE shape bucket so the
-    # second replay measures pure cache-hit overhead.
-    shape = tuple(np.maximum(bucket_shape(ev_a), bucket_shape(ev_b))
-                  if amortize else bucket_shape(ev_a))
-    pv_a = pad_events(ev_a, min_shape=shape)
-    shape = bucket_shape(pv_a)              # the padded (pow2) bucket
+    # second replay measures pure cache-hit overhead.  For chunked rungs
+    # the event dimension is exempt — the compiled chunk step's shape is
+    # (chunk, non-event buckets), independent of the trace length.
+    shape = list(np.maximum(bucket_shape(ev_a), bucket_shape(ev_b))
+                 if amortize else bucket_shape(ev_a))
+    chunk = _chunk_for(n_events) if chunked else None
+    if chunked:
+        shape[0] = 1
+        pv_a = pad_events(ev_a, min_shape=tuple(shape),
+                          event_multiple=chunk)
+        fn_a = S.make_chunked_replay(pv_a, B.GRMU, chunk_events=chunk,
+                                     **GRMU_KW)
+    else:
+        pv_a = pad_events(ev_a, min_shape=tuple(shape))
+        fn_a = B.make_replay(pv_a, B.GRMU, **GRMU_KW)
+    shape = bucket_shape(pv_a)              # the padded bucket
     cap = B.default_heavy_capacity(pv_a)
-    fn_a = B.make_replay(pv_a, B.GRMU, **GRMU_KW)
     out, first_us = _timed_replay(fn_a, cap)
 
     repeats = 3 if amortize else 1
@@ -119,11 +159,34 @@ def _bench_rung(spec: str) -> dict:
         "cold_compile_us": cold_compile_us,
         "events_per_sec": eps,
         "accepted": accepted,
+        "chunked": chunked,
     }
+    rung.update(S.replay_bytes(pv_a, chunk))
+    if chunked:
+        rung.update(chunk_events=chunk, num_chunks=fn_a.num_chunks)
+        if amortize:
+            # Unchunked twin on the same padded trace: byte-identical
+            # outputs prove chunk boundaries are decision-neutral.
+            pv_full = pad_events(pv_a)       # E up to its pow2 bucket
+            out_full, _ = _timed_replay(
+                B.make_replay(pv_full, B.GRMU, **GRMU_KW),
+                B.default_heavy_capacity(pv_full))
+            match = all(np.array_equal(np.asarray(out[k]),
+                                       np.asarray(out_full[k]))
+                        for k in out)
+            rung["chunked_matches_unchunked"] = bool(match)
+            emit(f"replay.chunked_parity[{spec}]", 0.0,
+                 f"chunks={fn_a.num_chunks} match={int(match)}")
     if amortize:
-        pv_b = pad_events(ev_b, min_shape=shape)
-        assert bucket_shape(pv_b) == tuple(shape)
-        fn_b = B.make_replay(pv_b, B.GRMU, **GRMU_KW)
+        if chunked:
+            pv_b = pad_events(ev_b, min_shape=(1,) + tuple(shape[1:]),
+                              event_multiple=chunk)
+            fn_b = S.make_chunked_replay(pv_b, B.GRMU,
+                                         chunk_events=chunk, **GRMU_KW)
+        else:
+            pv_b = pad_events(ev_b, min_shape=shape)
+            assert bucket_shape(pv_b) == tuple(shape)
+            fn_b = B.make_replay(pv_b, B.GRMU, **GRMU_KW)
         _, warm_first_us = _timed_replay(fn_b,
                                          B.default_heavy_capacity(pv_b))
         warm_compile_us = max(warm_first_us - steady_us, 0.0)
@@ -135,6 +198,11 @@ def _bench_rung(spec: str) -> dict:
         emit(f"replay.warm_bucket[{spec}]", warm_first_us,
              f"warm_compile_s={warm_compile_us/1e6:.3f} "
              f"ratio={ratio:.3f}")
+    rung["peak_rss_bytes"] = peak_rss_bytes()
+    emit(f"replay.rss[{spec}]", 0.0,
+         f"peak_rss_mb={rung['peak_rss_bytes']/1e6:.0f} "
+         f"event_mb={rung['event_bytes']/1e6:.1f} "
+         f"resident_mb={rung['resident_bytes']/1e6:.1f}")
     return rung
 
 
@@ -213,6 +281,21 @@ def run() -> None:
                         B.default_heavy_capacity(ev_base), **GRMU_KW)
     decisions_match = res_base.accepted_ids == res_py.accepted_ids
 
+    # Chunk-streaming parity on the base rung (small chunk => many
+    # boundaries), plus any per-rung chunked-vs-unchunked checks.
+    res_chunk = S.replay_chunked(ev_base, B.GRMU,
+                                 B.default_heavy_capacity(ev_base),
+                                 chunk_events=512, **GRMU_KW)
+    chunk_checks = [res_chunk.accepted_ids == res_base.accepted_ids
+                    and res_chunk.hourly_active_hw
+                    == res_base.hourly_active_hw]
+    chunk_checks += [r["chunked_matches_unchunked"] for r in rungs
+                     if "chunked_matches_unchunked" in r]
+    chunked_decisions_match = all(chunk_checks)
+    emit("replay.chunked_decisions", 0.0,
+         f"checks={len(chunk_checks)} all_match="
+         f"{int(chunked_decisions_match)}")
+
     sharded = _sharded_parity(base)
 
     b0 = rungs[0]
@@ -232,6 +315,8 @@ def run() -> None:
     history.append({"sha": _git_sha(),
                     "events_per_sec": b0["events_per_sec"],
                     "peak_fleet_gpus": peak_gpus,
+                    "peak_rss_bytes": max(r.get("peak_rss_bytes", 0)
+                                          for r in rungs),
                     "ladder": ladder})
 
     with open(OUT_PATH, "w") as f:
@@ -253,6 +338,7 @@ def run() -> None:
             # Hyperscale ladder.
             "ladder": rungs,
             "peak_fleet_gpus": peak_gpus,
+            "chunked_decisions_match": chunked_decisions_match,
             "sharded": sharded,
             "sharded_decisions_match": sharded.get("all_match"),
             "compile_cache": compile_cache.cache_stats(),

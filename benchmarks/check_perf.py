@@ -1,19 +1,29 @@
 """CI perf gate: compare a fresh BENCH_batched_engine.json to a baseline.
 
     python benchmarks/check_perf.py NEW BASELINE [--tol 0.30]
+                                                 [--rss-tol 0.30]
 
 Fails (exit 1) when any of:
   * ``decisions_match`` is false (batched engine diverged from the
     sequential reference);
   * ``sharded_decisions_match`` is false (shard_map path diverged —
     ``null``/absent means the run had one device and is not gated);
+  * ``chunked_decisions_match`` is false (chunk-streaming replay
+    diverged from the unchunked scan — absent means not measured);
   * any rung's ``compile_amortization_ratio`` exceeds 0.05 (a second
     trace from an already-seen bucket recompiled);
   * the base rung's ``batched_events_per_sec`` regressed more than
-    ``--tol`` (default 30%, env ``PERF_REGRESS_TOL``) vs the baseline.
+    ``--tol`` (default 30%, env ``PERF_REGRESS_TOL``) vs the baseline;
+  * any rung present in BOTH files regressed its ``peak_rss_bytes`` by
+    more than ``--rss-tol`` (default 30%, env ``PERF_RSS_TOL``) — the
+    memory-path twin of the events/sec gate.
 
-Throughput is only gated downward — faster is always fine.  No imports
-beyond the stdlib, so the gate itself can never perturb the numbers.
+Rungs are matched by name: a rung that exists only in the new file (the
+ladder grew) or only in the baseline (a different ``BENCH_LADDER``) is
+skipped, never an error — the ladder must be able to grow per PR
+without breaking the gate.  Throughput is only gated downward and RSS
+only upward — faster/leaner is always fine.  No imports beyond the
+stdlib, so the gate itself can never perturb the numbers.
 """
 from __future__ import annotations
 
@@ -24,7 +34,8 @@ import sys
 AMORTIZE_MAX_RATIO = 0.05
 
 
-def check(new: dict, base: dict, tol: float) -> list:
+def check(new: dict, base: dict, tol: float,
+          rss_tol: float = 0.30) -> list:
     errors = []
     if not new.get("decisions_match", False):
         errors.append("decisions_match is false: batched replay diverged "
@@ -32,6 +43,10 @@ def check(new: dict, base: dict, tol: float) -> list:
     if new.get("sharded_decisions_match") is False:
         errors.append("sharded_decisions_match is false: shard_map replay "
                       f"diverged ({new.get('sharded')})")
+    if new.get("chunked_decisions_match") is False:
+        errors.append("chunked_decisions_match is false: chunk-streaming "
+                      "replay diverged from the unchunked scan")
+    base_rungs = {r.get("rung"): r for r in base.get("ladder", [])}
     for rung in new.get("ladder", []):
         ratio = rung.get("compile_amortization_ratio")
         if ratio is not None and ratio > AMORTIZE_MAX_RATIO:
@@ -39,6 +54,20 @@ def check(new: dict, base: dict, tol: float) -> list:
                 f"rung {rung['rung']}: warm-bucket compile ratio "
                 f"{ratio:.3f} > {AMORTIZE_MAX_RATIO} — the compile cache "
                 "missed on an already-seen bucket")
+        if rung.get("chunked_matches_unchunked") is False:
+            errors.append(f"rung {rung['rung']}: chunked replay output "
+                          "differs from the unchunked scan")
+        prior = base_rungs.get(rung.get("rung"))
+        if prior is None:
+            continue                       # new/renamed rung: not gated
+        new_rss = rung.get("peak_rss_bytes") or 0
+        base_rss = prior.get("peak_rss_bytes") or 0
+        if base_rss > 0 and new_rss > (1.0 + rss_tol) * base_rss:
+            errors.append(
+                f"rung {rung['rung']}: peak RSS regressed "
+                f"{(new_rss / base_rss - 1) * 100:.0f}% "
+                f"({base_rss / 1e6:.0f} MB -> {new_rss / 1e6:.0f} MB; "
+                f"tolerance {rss_tol:.0%})")
     new_eps = new.get("batched_events_per_sec", 0.0)
     base_eps = base.get("batched_events_per_sec", 0.0)
     if base_eps > 0 and new_eps < (1.0 - tol) * base_eps:
@@ -56,17 +85,21 @@ def main() -> None:
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("PERF_REGRESS_TOL",
                                                  "0.30")))
+    ap.add_argument("--rss-tol", type=float,
+                    default=float(os.environ.get("PERF_RSS_TOL",
+                                                 "0.30")))
     args = ap.parse_args()
     with open(args.new) as f:
         new = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    errors = check(new, base, args.tol)
+    errors = check(new, base, args.tol, args.rss_tol)
     eps = new.get("batched_events_per_sec", 0.0)
     print(f"perf gate: events/sec={eps:.0f} "
           f"(baseline {base.get('batched_events_per_sec', 0.0):.0f}), "
           f"decisions_match={new.get('decisions_match')}, "
-          f"sharded={new.get('sharded_decisions_match')}")
+          f"sharded={new.get('sharded_decisions_match')}, "
+          f"chunked={new.get('chunked_decisions_match')}")
     for e in errors:
         print(f"PERF GATE FAILURE: {e}", file=sys.stderr)
     sys.exit(1 if errors else 0)

@@ -4,6 +4,38 @@ from __future__ import annotations
 import time
 
 
+def reset_peak_rss() -> bool:
+    """Reset the kernel's peak-RSS watermark (``VmHWM``) for this
+    process, so :func:`peak_rss_bytes` reads a *per-phase* peak rather
+    than the process-lifetime one.  Linux-only (``/proc/self/clear_refs``,
+    code 5); returns False where unsupported — callers then get the
+    monotonic lifetime peak, which is still gate-able but coarser."""
+    try:
+        with open("/proc/self/clear_refs", "w") as f:
+            f.write("5")
+        return True
+    except OSError:
+        return False
+
+
+def peak_rss_bytes() -> int:
+    """Peak resident set size in bytes since the last
+    :func:`reset_peak_rss` (``VmHWM``), falling back to
+    ``resource.getrusage`` (lifetime peak) off Linux.  0 if unknown."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    try:
+        import resource
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+    except Exception:  # noqa: BLE001
+        return 0
+
+
 def timed(fn, *args, repeats: int = 3, **kw):
     """Run fn repeats times, return (result, best_us_per_call)."""
     best = float("inf")

@@ -33,6 +33,12 @@ Scale path (hyperscale replay; see docs/ARCHITECTURE.md):
   * all in-scan state is 32-bit (int32/float32) and every metric series
     is accumulated into preallocated in-scan buffers (``hourly``,
     ``counts``) — a 1M-VM / 10k-GPU trace fits comfortably on host CPU;
+  * the trace itself is **bit-packed** (uint8 event kinds, int16 profile
+    columns; int32 only for VM/GPU indices) and widened per gathered
+    scalar inside the scan step, and ``repro.core.streaming`` drives the
+    same step over fixed-size event *chunks* with a donated carry, so
+    only O(chunk) trace bytes are resident at once — trace size no
+    longer bounds replay size (the 10M-VM / 100k-GPU ladder rung);
   * ``repro.core.sharded`` wraps the same scan body in ``shard_map`` so
     the per-arrival scoring gathers run on fleet partitions with a cheap
     cross-shard argmax reconcile (decision-identical to this module);
@@ -112,28 +118,35 @@ _EPS = 1e-9
 class EventTrace:
     """Host-precomputed event stream + static cluster/VM metadata.
 
+    The big arrays are **bit-packed**: event kinds are ``uint8`` and
+    profile indices ``int16`` (profile counts are tiny), with ``int32``
+    reserved for the VM/GPU indices that actually need the range.  The
+    scan widens every gathered scalar back to int32 before any decision
+    arithmetic (``_scan_fn``), so packing changes bytes-at-rest only —
+    decisions are bit-identical to the legacy int32 layout.
+
     ``num_vms`` / ``num_gpus`` / ``num_hosts`` / ``vm_ids`` /
     ``step_times`` always describe the *logical* (unpadded) trace; after
     ``repro.core.bucketing.pad_events`` the array fields may be longer
-    (power-of-two buckets) and ``hourly_slots`` carries the padded
-    metric-buffer length."""
+    (power-of-two buckets, or multiples of a streaming chunk) and
+    ``hourly_slots`` carries the padded metric-buffer length."""
     # Per-event rows (E,), sorted by (bucket, kind, time, vm_id):
-    kind: np.ndarray         # int32: DEPARTURE | ARRIVAL | STEP_END | PAD
+    kind: np.ndarray         # uint8: DEPARTURE | ARRIVAL | STEP_END | PAD
     vm_index: np.ndarray     # int32 dense 0..N-1 (0 for step-end rows)
-    profile: np.ndarray      # int32 reference-model profile (0 for step-end)
+    profile: np.ndarray      # int16 reference-model profile (0 for step-end)
     time: np.ndarray         # float32 step start t of the row's bucket
     idx: np.ndarray          # int32: arrival order (arrivals),
     #                          step index (step ends), 0 otherwise
     # Static per-VM arrays in dense (arrival, vm_id) order (N,):
     vm_ids: np.ndarray       # int64 original vm_id per dense index
-    vm_pids: np.ndarray      # (N, M) int32 profile per fleet model
+    vm_pids: np.ndarray      # (N, M) int16 profile per fleet model
     #                          (column 0 = the reference-model profile)
     vm_heavy: np.ndarray     # (N,) bool — full-GPU request on every model
     vm_cpu: np.ndarray       # float32
     vm_ram: np.ndarray       # float32
     # MECC observation schedule over *included* arrivals (A,):
     arr_times: np.ndarray    # float32 observation time (bucket start)
-    arr_pids: np.ndarray     # (A, M) int32 profile per fleet model
+    arr_pids: np.ndarray     # (A, M) int16 profile per fleet model
     # Step sampling times (S,):
     step_times: np.ndarray   # float64
     # Cluster shape:
@@ -187,13 +200,23 @@ def build_events_arrays(*, arrival: np.ndarray, duration: np.ndarray,
     array and the event rows are built and sorted with numpy — identical
     ordering semantics to :func:`build_events` (which now delegates here).
     ``pids`` is (N, M): each VM's Eq. 27-30 profile per fleet model.
+
+    Trace-construction RSS is kept O(packed trace): every temporary that
+    used to default to int64 (bucket indices, dense VM indices, kind
+    columns, profile columns) is carried at the narrowest provably-safe
+    width — event counts and VM indices fit int32 up to 2^31 rows, kinds
+    fit uint8, profiles int16 — and the sort tiebreak reuses the vm_ids
+    column at int32 when the ids fit.  The two ``np.lexsort`` permutation
+    outputs are numpy's intp and stay int64; everything else is packed.
     """
     arrival = np.asarray(arrival, np.float64).reshape(-1)
     duration = np.asarray(duration, np.float64).reshape(-1)
     n = arrival.shape[0]
+    if n >= np.iinfo(np.int32).max:
+        raise ValueError(f"trace has {n} VMs; int32 VM indices overflow")
     M = len(models)
-    pids = (np.asarray(pids, np.int32).reshape(n, M) if n
-            else np.zeros((0, M), np.int32))
+    pids = (np.asarray(pids, np.int16).reshape(n, M) if n
+            else np.zeros((0, M), np.int16))
     vm_ids = np.asarray(vm_ids, np.int64).reshape(-1)
     cpu = np.asarray(cpu, np.float32).reshape(-1)
     ram = np.asarray(ram, np.float32).reshape(-1)
@@ -203,11 +226,12 @@ def build_events_arrays(*, arrival: np.ndarray, duration: np.ndarray,
     arrival, duration = arrival[order], duration[order]
     vm_ids, pids = vm_ids[order], pids[order]
     cpu, ram = cpu[order], ram[order]
+    del order
     departure = arrival + duration
 
     # Heavy iff the request maps to the full-GPU profile on EVERY model
     # (vectorized pc.heavy_request).
-    hp = np.array([m.heavy_profile for m in models], np.int32)
+    hp = np.array([m.heavy_profile for m in models], np.int16)
     heavy = (np.all((pids == hp[None, :]) & (hp[None, :] >= 0), axis=1)
              if n else np.zeros(0, bool))
 
@@ -216,45 +240,53 @@ def build_events_arrays(*, arrival: np.ndarray, duration: np.ndarray,
     st64 = step_grid(horizon, step_hours)
     S = len(st64)
 
-    # Bucket math — identical float64 expressions to the scalar helpers.
-    ab = np.floor((arrival + _EPS) / step_hours).astype(np.int64)
-    db = np.ceil((departure + _EPS) / step_hours).astype(np.int64) - 1
+    # Bucket math — identical float64 expressions to the scalar helpers;
+    # bucket ordinals are step counts, comfortably int32.
+    ab = np.floor((arrival + _EPS) / step_hours).astype(np.int32)
+    db = (np.ceil((departure + _EPS) / step_hours).astype(np.int32) - 1)
     # A same-bucket departure is heap-popped one bucket later (the heap
     # push happens after the bucket's departure phase).
     db = np.maximum(db, ab + 1)
     inc = ab < S            # past-horizon arrivals are never offered
     dep_inc = inc & (db < S)
-    a_ord = np.cumsum(inc) - 1              # arrival ordinal over included
+    a_ord = (np.cumsum(inc, dtype=np.int64) - 1).astype(np.int32)
 
-    dense = np.arange(n, dtype=np.int64)
-    ref_p = pids[:, 0] if n else np.zeros(0, np.int32)
+    dense = np.arange(n, dtype=np.int32)
+    ref_p = pids[:, 0] if n else np.zeros(0, np.int16)
+    # Sort tiebreak: vm_ids, at int32 when the id range allows it.
+    tb = (vm_ids.astype(np.int32)
+          if n == 0 or (vm_ids.min() >= np.iinfo(np.int32).min
+                        and vm_ids.max() <= np.iinfo(np.int32).max)
+          else vm_ids)
 
     def rows(sel, kind, t_actual, tiebreak, bucket, idx):
-        return dict(bucket=bucket[sel], kind=np.full(sel.sum(), kind,
-                                                     np.int64),
+        return dict(bucket=bucket[sel],
+                    kind=np.full(int(sel.sum()), kind, np.uint8),
                     t=t_actual[sel], tb=tiebreak[sel],
-                    vm=dense[sel], p=ref_p[sel].astype(np.int64),
+                    vm=dense[sel], p=ref_p[sel],
                     idx=idx[sel])
 
-    arr = rows(inc, ARRIVAL, arrival, vm_ids, ab, a_ord)
-    dep = rows(dep_inc, DEPARTURE, departure, vm_ids, db, np.zeros(n,
-                                                                   np.int64))
-    si = np.arange(S, dtype=np.int64)
-    stp = dict(bucket=si, kind=np.full(S, STEP_END, np.int64),
-               t=np.full(S, np.inf), tb=np.zeros(S, np.int64),
-               vm=np.zeros(S, np.int64), p=np.zeros(S, np.int64), idx=si)
+    arr = rows(inc, ARRIVAL, arrival, tb, ab, a_ord)
+    dep = rows(dep_inc, DEPARTURE, departure, tb, db,
+               np.zeros(n, np.int32))
+    si = np.arange(S, dtype=np.int32)
+    stp = dict(bucket=si, kind=np.full(S, STEP_END, np.uint8),
+               t=np.full(S, np.inf), tb=np.zeros(S, tb.dtype),
+               vm=np.zeros(S, np.int32), p=np.zeros(S, np.int16), idx=si)
 
     cat = {k: np.concatenate([arr[k], dep[k], stp[k]]) for k in arr}
+    del arr, dep, stp
     perm = np.lexsort((cat["tb"], cat["t"], cat["kind"], cat["bucket"]))
     for k in cat:
         cat[k] = cat[k][perm]
+    del perm
 
     return EventTrace(
-        kind=cat["kind"].astype(np.int32),
-        vm_index=cat["vm"].astype(np.int32),
-        profile=cat["p"].astype(np.int32),
+        kind=cat["kind"],
+        vm_index=cat["vm"],
+        profile=cat["p"],
         time=st64[cat["bucket"]].astype(np.float32),
-        idx=cat["idx"].astype(np.int32),
+        idx=cat["idx"],
         vm_ids=vm_ids,
         vm_pids=pids,
         vm_heavy=heavy,
@@ -400,17 +432,22 @@ def _gpu_full(events: EventTrace) -> np.ndarray:
 def trace_arrays(events: EventTrace) -> Dict[str, np.ndarray]:
     """The scan's traced-argument pytree (host numpy; callers move it to
     device).  Everything shape-padded lives here; two traces in the same
-    bucket produce identical shapes/dtypes and share one executable."""
+    bucket produce identical shapes/dtypes and share one executable.
+
+    The event stream and per-VM/arrival tables keep the packed dtypes
+    (uint8 kinds, int16 profiles) on device — ``_scan_fn`` widens each
+    gathered scalar to int32 inside the scan step, so device bytes track
+    the packed layout while decision arithmetic stays int32/float32."""
     M = len(events.models)
     n_vm_rows = len(events.vm_pids)
     return dict(
-        kind=np.clip(events.kind, 0, 3).astype(np.int32),
+        kind=np.clip(events.kind, 0, 3).astype(np.uint8),
         vm_index=events.vm_index.astype(np.int32),
-        profile=events.profile.astype(np.int32),
+        profile=events.profile.astype(np.int16),
         time=events.time.astype(np.float32),
         idx=events.idx.astype(np.int32),
-        vm_pids=(events.vm_pids.astype(np.int32) if n_vm_rows
-                 else np.zeros((1, M), np.int32)),
+        vm_pids=(events.vm_pids.astype(np.int16) if n_vm_rows
+                 else np.zeros((1, M), np.int16)),
         vm_heavy=(events.vm_heavy.astype(bool) if n_vm_rows
                   else np.zeros(1, bool)),
         # Per-VM (cpu, ram) rows, so host feasibility is one gather + one
@@ -426,8 +463,8 @@ def trace_arrays(events: EventTrace) -> Dict[str, np.ndarray]:
         arr_times=(events.arr_times.astype(np.float32)
                    if len(events.arr_times)
                    else np.full(1, np.inf, np.float32)),
-        arr_pids=(events.arr_pids.astype(np.int32)
-                  if len(events.arr_times) else np.zeros((1, M), np.int32)),
+        arr_pids=(events.arr_pids.astype(np.int16)
+                  if len(events.arr_times) else np.zeros((1, M), np.int16)),
         # Logical fleet size: basket capacities are counted against the
         # real fleet, not the padded one.
         n_gpus=np.asarray(events.num_gpus, np.int32),
@@ -509,13 +546,30 @@ def _kernel_pick(st: ReplayStatics, free, prof0, host_ok, mecc_w):
     return jnp.where(jnp.any(scores >= 0), jnp.argmax(scores), -1)
 
 
-def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
-             tr: Dict[str, jax.Array], heavy_capacity) -> Dict[str, jax.Array]:
-    """The whole replay as a pure function of (state0, trace, cap).
+# Keys of the E-sized event-stream arrays inside the trace pytree — the
+# only arrays ``repro.core.streaming`` slices into chunks; everything
+# else ("rest") stays resident across chunks.
+EVENT_KEYS = ("kind", "vm_index", "profile", "time", "idx")
 
-    Shapes come from the arguments; ``st`` carries every static.  jit this
+
+def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
+               tr: Dict[str, jax.Array], heavy_capacity
+               ) -> Dict[str, jax.Array]:
+    """Scan the event stream in ``tr`` through the replay step and return
+    the **final carry** (the whole cluster state).
+
+    This is the chunk-streaming unit: because the carry is the complete
+    state and the step function never looks at an event's position, a
+    scan over ``tr`` equals any composition of scans over consecutive
+    slices of ``tr`` — chunk boundaries are decision-neutral by
+    construction (asserted in tests/test_streaming.py).
+
+    Shapes come from the arguments; ``st`` carries every static.  jit
     once per ``st`` — XLA's cache then keys executables on the bucket
-    shapes, and ``state0`` may be donated."""
+    (or chunk) shapes, and ``state0`` may be donated.  Packed trace
+    dtypes (uint8 kinds, int16 profiles) are widened to int32 per
+    gathered scalar here, so decision arithmetic is identical to the
+    unpacked layout."""
     T = pc.tables_for(jnp, st.models)
     G = tr["gpu_mid"].shape[0]
     N = state0["vmrow"].shape[0]
@@ -548,7 +602,7 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
     # -- arrival ---------------------------------------------------------
     def arrival(state, e):
         p, vi = e["profile"], e["vm_index"]
-        pids = _vmpids[vi]                              # (M,)
+        pids = _vmpids[vi].astype(jnp.int32)            # (M,)
         mecc_w = None
         if st.policy == MECC:
             # on_arrival_observed: count the arrival (once per fleet
@@ -564,7 +618,8 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
 
             def body(c):
                 ptr, cnt = c
-                return ptr + 1, cnt.at[_marange, _apids[ptr]].add(-1)
+                obs = _apids[ptr].astype(jnp.int32)
+                return ptr + 1, cnt.at[_marange, obs].add(-1)
 
             ptr, counts = jax.lax.while_loop(
                 cond, body, (state["mecc_ptr"], counts))
@@ -636,7 +691,7 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
         ok = gpu >= 0
         okc = ok.astype(jnp.int32)
         g = jnp.maximum(gpu, 0)
-        p_g = _vmpids[vi, _gmid[g]]
+        p_g = _vmpids[vi, _gmid[g]].astype(jnp.int32)
         blocks = ((jnp.int32(1) << T.sizes[_gmid[g], p_g]) - 1) << start
         state = dict(
             state,
@@ -666,7 +721,8 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
             sel = on_g & (vm_start == b)
             has = sel.any()
             vi = jnp.argmax(sel)
-            prof_blk.append(jnp.where(has, _vmpids[vi, mid_g], -1))
+            prof_blk.append(jnp.where(
+                has, _vmpids[vi, mid_g].astype(jnp.int32), -1))
             vi_blk.append(jnp.where(has, vi, N))
         prof_blk = jnp.stack(prof_blk)
         vi_blk = jnp.stack(vi_blk)
@@ -693,8 +749,8 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
         owner_c = jnp.clip(owner, 0, N - 1)
         # The sole VM mapped onto every fleet model, (G, M); and onto
         # its own GPU's model, (G,).
-        sole_pids = jnp.where((owner >= 0)[:, None], _vmpids[owner_c],
-                              -1)
+        sole_pids = jnp.where((owner >= 0)[:, None],
+                              _vmpids[owner_c].astype(jnp.int32), -1)
         sole_own = sole_pids[_garange, _gmid]
         sole_res = jnp.where((owner >= 0)[:, None], _vmres[owner_c],
                              jnp.float32(0.0))
@@ -762,6 +818,10 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
         return state
 
     def step(state, e):
+        # Widen the packed per-event scalars once; every branch then
+        # computes in int32 exactly as the legacy layout did.
+        e = dict(e, kind=e["kind"].astype(jnp.int32),
+                 profile=e["profile"].astype(jnp.int32))
         state = jax.lax.switch(
             e["kind"],
             [departure, arrival, step_end, pad_noop],
@@ -769,6 +829,11 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
         return state, None
 
     final, _ = jax.lax.scan(step, state0, ev)
+    return final
+
+
+def _finalize(final: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Reduce a final scan carry to the replay's small output arrays."""
     zero = jnp.asarray(0, jnp.int32)
     return dict(
         accepted=final["counts"][:, 0], total=final["counts"][:, 1],
@@ -777,6 +842,14 @@ def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
         h_pms=final["hourly"][:, 2], h_gpus=final["hourly"][:, 3],
         intra=final.get("intra", zero), inter=final.get("inter", zero),
     )
+
+
+def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
+             tr: Dict[str, jax.Array], heavy_capacity
+             ) -> Dict[str, jax.Array]:
+    """The whole replay as a pure function of (state0, trace, cap) —
+    :func:`_scan_body` followed by the output reductions."""
+    return _finalize(_scan_body(st, state0, tr, heavy_capacity))
 
 
 def _jitted_run(st: ReplayStatics) -> Callable:
@@ -884,6 +957,6 @@ __all__ = ["EventTrace", "build_events", "build_events_arrays",
            "make_replay", "replay", "result_from_arrays",
            "sweep_heavy_capacity", "default_heavy_capacity",
            "trace_arrays", "init_state", "replay_statics",
-           "ReplayStatics", "step_grid",
+           "ReplayStatics", "step_grid", "EVENT_KEYS",
            "FF", "BF", "MCC", "MECC", "GRMU",
            "DEPARTURE", "ARRIVAL", "STEP_END", "PAD", "PAD_BASKET"]

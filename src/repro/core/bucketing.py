@@ -69,7 +69,8 @@ def bucket_shape(events: EventTrace) -> Tuple[int, ...]:
 
 def pad_events(events: EventTrace, *, shards: int = 1,
                min_gpus: int = 1, min_events: int = 1,
-               min_shape: Tuple[int, ...] | None = None) -> EventTrace:
+               min_shape: Tuple[int, ...] | None = None,
+               event_multiple: int | None = None) -> EventTrace:
     """Pad every shape dimension of ``events`` to its power-of-two bucket.
 
     ``shards`` (a power of two) guarantees the padded GPU count divides
@@ -79,11 +80,27 @@ def pad_events(events: EventTrace, *, shards: int = 1,
     tuple — forces every dimension at least that large, which pins two
     near-identical traces into one bucket (the compile-amortization
     measurement in benchmarks/batched_engine.py).  Idempotent: re-padding
-    an already bucketed trace is a no-op."""
+    an already bucketed trace is a no-op.
+
+    ``event_multiple`` switches the *event* dimension from pow2 rounding
+    to round-up-to-a-multiple: the chunk-streaming replay
+    (``repro.core.streaming``) compiles one step per chunk shape, so E
+    only needs to split evenly into chunks — rounding E to the next
+    multiple of the (pow2) chunk length instead of the next pow2 keeps
+    the padding overhead bounded by one chunk at any scale, while the
+    non-event dimensions keep their pow2 buckets (the compiled chunk
+    step's shape signature)."""
     if shards & (shards - 1):
         raise ValueError(f"shards must be a power of two, got {shards}")
     mE, mN, mG, mH, mA, mS = min_shape or (1, 1, 1, 1, 1, 1)
-    E = next_pow2(max(len(events.kind), min_events, mE))
+    E = max(len(events.kind), min_events, mE)
+    if event_multiple:
+        if event_multiple & (event_multiple - 1):
+            raise ValueError("event_multiple must be a power of two, "
+                             f"got {event_multiple}")
+        E = -(-E // event_multiple) * event_multiple
+    else:
+        E = next_pow2(E)
     N = next_pow2(max(len(events.vm_pids), 1, mN))
     G = next_pow2(max(len(events.gpu_model_id), shards, min_gpus, mG))
     H = next_pow2(max(len(events.cpu_cap), 1, mH))
@@ -92,9 +109,9 @@ def pad_events(events: EventTrace, *, shards: int = 1,
     M = len(events.models)
 
     arr_pids = (events.arr_pids if len(events.arr_times)
-                else np.zeros((0, M), np.int32))
+                else np.zeros((0, M), np.int16))
     vm_pids = (events.vm_pids if len(events.vm_pids)
-               else np.zeros((0, M), np.int32))
+               else np.zeros((0, M), np.int16))
     return dataclasses.replace(
         events,
         kind=_pad_to(events.kind, E, PAD),

@@ -28,8 +28,11 @@ _PERSISTENT_DIR: str = ""
 
 
 def cached_replay_fn(key: Any, build: Callable[[], Callable]) -> Callable:
-    """Return the process-cached replay callable for ``key`` (hashable —
-    a :class:`repro.core.batched.ReplayStatics`), building it on miss."""
+    """Return the process-cached replay callable for ``key`` (any
+    hashable — a :class:`repro.core.batched.ReplayStatics`, or a
+    ``(statics, variant, ...)`` tuple such as the sharded engine's
+    ``(st, K)`` and the streaming engine's ``(st, "chunk", chunk)`` /
+    ``(st, "finalize")`` keys), building it on miss."""
     fn = _RUN_CACHE.get(key)
     if fn is None:
         _STATS["misses"] += 1

@@ -23,6 +23,11 @@ engine would, the sharded path is decision-identical by construction —
 and asserted so in tests/test_sharded.py and the benchmark ladder's
 ``sharded_decisions_match`` equivalence mode.
 
+Sharding composes with chunk streaming: ``repro.core.streaming`` wraps
+the per-chunk scan body in the same fleet-partition shard_map
+(``make_chunked_replay(..., num_shards=K)``), so a sharded fleet can
+also stream its event chunks with only O(chunk) trace bytes resident.
+
 Run with virtual host devices for CPU testing/benchmarks:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set *before*
 importing jax — ``benchmarks/run.py --perf-env`` or

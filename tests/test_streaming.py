@@ -1,0 +1,187 @@
+"""Chunk-streamed replay is decision-neutral and stays packed.
+
+Property: splitting the event stream into fixed-size chunks and
+threading the donated carry across them (``repro.core.streaming``)
+changes *nothing* about the replay — per-VM decisions, per-profile
+tallies, hourly series, and migration counts are identical to the
+single-scan engine for every registry policy, on two seeds, on a mixed
+A30+A100+H100 fleet, including chunk sizes small enough to split
+arrival bursts, GRMU defrag/consolidation step-ends, and MECC window
+expiries across chunk boundaries.  Also pins the packed event-trace
+dtypes (uint8 kinds, int16 profiles/pids, no int64 on the stream), the
+chunk-bucket compile-cache contract (different-length traces sharing a
+chunk bucket share one executable), composition with the shard_map
+fleet path, and — behind ``-m heavy`` — construction of the 10M-VM /
+100k-GPU ladder trace.
+"""
+import numpy as np
+import pytest
+
+from repro.core import batched as B
+from repro.core import compile_cache
+from repro.core import streaming as S
+from repro.core.bucketing import bucket_shape, pad_events
+from repro.core.grmu import GRMU
+from repro.sim.engine import simulate
+from test_bucketing import POLICIES, assert_same_replay
+from test_equivalence import hetero_scenario, random_scenario
+
+GRMU_KW = dict(defrag=True, consolidation_interval=6.0)
+
+
+def chunked_vs_unchunked(ev, pid, chunk, **kw):
+    cap = B.default_heavy_capacity(ev)
+    r0 = B.replay(ev, pid, cap, **kw)
+    r1 = S.replay_chunked(ev, pid, cap, chunk_events=chunk, **kw)
+    assert_same_replay(r0, r1)
+    return r0, r1
+
+
+@pytest.mark.parametrize("policy", list(POLICIES))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chunked_replay_decision_identical_hetero(policy, seed):
+    pid, kw = POLICIES[policy]
+    cluster, vms = hetero_scenario(seed)
+    ev = B.build_events(vms, cluster)
+    chunked_vs_unchunked(ev, pid, 32, **kw)
+
+
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_tiny_chunks_split_defrag_and_consolidation(chunk):
+    """GRMU with defrag + periodic consolidation: step-end events land
+    mid-chunk and at boundaries; both must replay identically."""
+    cluster, vms = hetero_scenario(1)
+    ev = B.build_events(vms, cluster)
+    r0, r1 = chunked_vs_unchunked(ev, B.GRMU, chunk, **GRMU_KW)
+    assert r0.intra_migrations + r0.inter_migrations > 0  # not vacuous
+
+
+def test_tiny_chunks_split_mecc_windows():
+    """MECC's two-pointer observation window expires across chunk
+    boundaries — the pointer lives in the carry, so chunking must not
+    perturb which arrivals each window sees."""
+    cluster, vms = random_scenario(1)
+    ev = B.build_events(vms, cluster)
+    chunked_vs_unchunked(ev, B.MECC, 16)
+
+
+def test_chunked_anchor_matches_sequential_engine():
+    """Transitivity guard: chunked == unchunked is only meaningful if
+    the anchor still equals the sequential reference."""
+    cluster, vms = hetero_scenario(0)
+    pol = GRMU(cluster, heavy_capacity_frac=0.3, **GRMU_KW)
+    res = simulate(cluster, pol, vms)
+    cluster2, vms2 = hetero_scenario(0)
+    ev = B.build_events(vms2, cluster2)
+    cap = int(round(0.3 * cluster2.num_gpus))
+    r1 = S.replay_chunked(ev, B.GRMU, cap, chunk_events=32, **GRMU_KW)
+    assert r1.accepted_ids == res.accepted_ids
+    assert r1.hourly_acceptance == res.hourly_acceptance
+    assert r1.inter_migrations == res.inter_migrations
+
+
+def test_event_trace_is_packed():
+    """The bit-packing contract: nothing on the event stream or the
+    per-VM tables is wider than it needs to be, before or after
+    padding, and trace_arrays ships the packed dtypes as-is."""
+    cluster, vms = hetero_scenario(0)
+    ev = B.build_events(vms, cluster)
+    for t in (ev, pad_events(ev), pad_events(ev, event_multiple=64)):
+        assert t.kind.dtype == np.uint8
+        assert t.profile.dtype == np.int16
+        assert t.vm_pids.dtype == np.int16
+        assert t.arr_pids.dtype == np.int16
+        assert t.vm_index.dtype == np.int32
+        assert t.idx.dtype == np.int32
+    tr = B.trace_arrays(ev)
+    assert tr["kind"].dtype == np.uint8
+    assert tr["profile"].dtype == np.int16
+    assert tr["vm_pids"].dtype == np.int16
+    assert not any(np.asarray(v).dtype == np.int64 for v in tr.values())
+
+
+def test_event_multiple_padding_and_auto_pad():
+    """E rounds up to a multiple of the chunk (not pow2), the pad is
+    idempotent, and make_chunked_replay auto-pads ragged traces."""
+    cluster, vms = random_scenario(0)
+    ev = B.build_events(vms, cluster)
+    assert len(ev.kind) % 64 != 0          # ragged by construction
+    pv = pad_events(ev, event_multiple=64)
+    assert len(pv.kind) % 64 == 0
+    assert len(pv.kind) - len(ev.kind) < 64
+    assert bucket_shape(pad_events(pv, event_multiple=64)) == \
+        bucket_shape(pv)
+    run = S.make_chunked_replay(ev, B.FF, chunk_events=64)
+    assert len(run.events.kind) % 64 == 0
+    assert run.num_chunks == len(run.events.kind) // 64
+    with pytest.raises(ValueError):
+        pad_events(ev, event_multiple=48)  # not a power of two
+    with pytest.raises(ValueError):
+        S.make_chunked_replay(ev, B.FF, chunk_events=0)
+
+
+def test_chunk_bucket_shares_one_executable():
+    """Two traces of different raw length that land in the same chunk
+    bucket reuse one compiled chunk step — the compiled shape is
+    (chunk, state-bucket), independent of trace length."""
+    before = dict(compile_cache.cache_stats())
+    shapes = []
+    for seed in (0, 1):
+        cluster, vms = random_scenario(seed)
+        ev = B.build_events(vms, cluster)
+        run = S.make_chunked_replay(ev, B.FF, chunk_events=128)
+        shapes.append(bucket_shape(run.events)[1:])
+        np.testing.assert_array_equal(
+            np.asarray(run(0)["accepted"]) >= 0, True)
+    after = compile_cache.cache_stats()
+    assert shapes[0] == shapes[1]          # same non-event bucket
+    # chunk step + finalize compile once; second trace hits both.
+    assert after["misses"] - before["misses"] <= 2
+    assert after["hits"] >= before["hits"] + 2
+
+
+def test_split_trace_and_replay_bytes():
+    cluster, vms = random_scenario(0)
+    ev = B.build_events(vms, cluster)
+    tr = B.trace_arrays(ev)
+    evs, rest = S.split_trace(tr)
+    assert set(evs) == set(B.EVENT_KEYS)
+    assert set(evs) | set(rest) == set(tr)
+    nb = S.replay_bytes(ev, chunk_events=8)
+    assert nb["event_bytes"] == sum(int(np.asarray(tr[k]).nbytes)
+                                    for k in B.EVENT_KEYS)
+    assert 0 < nb["chunk_bytes"] < nb["event_bytes"]
+
+
+def test_sharded_chunked_replay_matches():
+    """Chunk streaming composes with the fleet shard_map: the chunk
+    step runs under the same partitioning and must stay
+    decision-identical (K=1 on CPU; K>1 covered by test_sharded's
+    host-count gating)."""
+    cluster, vms = hetero_scenario(0)
+    ev = B.build_events(vms, cluster)
+    cap = B.default_heavy_capacity(ev)
+    r0 = B.replay(ev, B.GRMU, cap, **GRMU_KW)
+    r1 = S.replay_chunked(ev, B.GRMU, cap, chunk_events=32,
+                          num_shards=1, **GRMU_KW)
+    assert_same_replay(r0, r1)
+
+
+@pytest.mark.heavy
+def test_hyperscale_trace_construction_stays_packed():
+    """The 10Mx100k ladder rung's trace builds chunked and packed: the
+    event stream is ~15 B/row, pids are int16, and no int64 survives
+    onto the stream.  Excluded from tier-1 via ``-m "not heavy"``;
+    replay timing lives in benchmarks/batched_engine.py (BENCH_HEAVY)."""
+    from repro.workload.synthetic import SyntheticConfig, generate_events
+    cfg = SyntheticConfig(n_vms=10_000_000, n_gpus=100_000,
+                          chunk_vms=1_000_000,
+                          fleet={"A30-24GB": 0.25, "A100-40GB": 0.5,
+                                 "H100-80GB": 0.25})
+    ev = generate_events(cfg)
+    assert ev.kind.dtype == np.uint8 and ev.profile.dtype == np.int16
+    assert ev.vm_pids.dtype == np.int16
+    nb = S.replay_bytes(ev, chunk_events=S.DEFAULT_CHUNK_EVENTS)
+    per_row = nb["event_bytes"] / len(ev.kind)
+    assert per_row <= 16                   # uint8+int16+int32+f32+int32
+    assert nb["chunk_bytes"] < 2 * 1024 * 1024
