@@ -21,7 +21,9 @@ Fails (exit 1) when any of:
 Rungs are matched by name: a rung that exists only in the new file (the
 ladder grew) or only in the baseline (a different ``BENCH_LADDER``) is
 skipped, never an error — the ladder must be able to grow per PR
-without breaking the gate.  Throughput is only gated downward and RSS
+without breaking the gate.  Every such skip is *reported* with its
+reason (``perf gate: skipping rung ...``) so a silently-shrunk ladder
+is visible in the CI log instead of passing as an empty comparison.  Throughput is only gated downward and RSS
 only upward — faster/leaner is always fine.  No imports beyond the
 stdlib, so the gate itself can never perturb the numbers.
 """
@@ -35,8 +37,11 @@ AMORTIZE_MAX_RATIO = 0.05
 
 
 def check(new: dict, base: dict, tol: float,
-          rss_tol: float = 0.30) -> list:
+          rss_tol: float = 0.30) -> tuple:
+    """Returns ``(errors, skips)``: gate failures, and per-rung
+    skip-reason strings for rungs that could not be compared."""
     errors = []
+    skips = []
     if not new.get("decisions_match", False):
         errors.append("decisions_match is false: batched replay diverged "
                       "from the sequential engine")
@@ -59,7 +64,11 @@ def check(new: dict, base: dict, tol: float,
                           "differs from the unchunked scan")
         prior = base_rungs.get(rung.get("rung"))
         if prior is None:
-            continue                       # new/renamed rung: not gated
+            skips.append(
+                f"skipping rung {rung.get('rung')!r}: absent from the "
+                "committed baseline (new or renamed rung — not gated; "
+                "it becomes gated once a baseline with it is committed)")
+            continue
         new_rss = rung.get("peak_rss_bytes") or 0
         base_rss = prior.get("peak_rss_bytes") or 0
         if base_rss > 0 and new_rss > (1.0 + rss_tol) * base_rss:
@@ -68,13 +77,20 @@ def check(new: dict, base: dict, tol: float,
                 f"{(new_rss / base_rss - 1) * 100:.0f}% "
                 f"({base_rss / 1e6:.0f} MB -> {new_rss / 1e6:.0f} MB; "
                 f"tolerance {rss_tol:.0%})")
+    new_rungs = {r.get("rung") for r in new.get("ladder", [])}
+    for name in base_rungs:
+        if name not in new_rungs:
+            skips.append(
+                f"skipping rung {name!r}: present in the committed "
+                "baseline but missing from this run (different "
+                "BENCH_LADDER? — its eps/RSS history was NOT compared)")
     new_eps = new.get("batched_events_per_sec", 0.0)
     base_eps = base.get("batched_events_per_sec", 0.0)
     if base_eps > 0 and new_eps < (1.0 - tol) * base_eps:
         errors.append(
             f"events/sec regressed {(1 - new_eps / base_eps) * 100:.0f}% "
             f"({base_eps:.0f} -> {new_eps:.0f}; tolerance {tol:.0%})")
-    return errors
+    return errors, skips
 
 
 def main() -> None:
@@ -93,13 +109,15 @@ def main() -> None:
         new = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    errors = check(new, base, args.tol, args.rss_tol)
+    errors, skips = check(new, base, args.tol, args.rss_tol)
     eps = new.get("batched_events_per_sec", 0.0)
     print(f"perf gate: events/sec={eps:.0f} "
           f"(baseline {base.get('batched_events_per_sec', 0.0):.0f}), "
           f"decisions_match={new.get('decisions_match')}, "
           f"sharded={new.get('sharded_decisions_match')}, "
           f"chunked={new.get('chunked_decisions_match')}")
+    for s in skips:
+        print(f"perf gate: {s}")
     for e in errors:
         print(f"PERF GATE FAILURE: {e}", file=sys.stderr)
     sys.exit(1 if errors else 0)

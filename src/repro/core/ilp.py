@@ -192,7 +192,7 @@ class MigILP:
         pids = np.array(
             [resolve_profile_ids(v, self.models, missing_ok=True)
              for v in self.vms],
-            dtype=np.int64).reshape(N, len(self.models))
+            dtype=np.int32).reshape(N, len(self.models))
         g_it = np.zeros((N, G))
         s_it = np.zeros((N, G))
         compat = np.zeros((N, G), dtype=bool)

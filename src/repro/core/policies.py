@@ -117,8 +117,10 @@ class MaxECC(PlacementPolicy):
         super().__init__(cluster)
         self.window = window_hours
         self.history: Deque[Tuple[float, np.ndarray]] = deque()
+        # int32 like the batched engine's in-scan counts (windowed arrival
+        # tallies are tiny): both engines weigh MECC with the same dtype.
         self._counts = np.zeros(
-            (len(cluster.models), self._T.num_profiles), dtype=np.int64)
+            (len(cluster.models), self._T.num_profiles), dtype=np.int32)
         self._m_arange = np.arange(len(cluster.models))
 
     def on_arrival_observed(self, vm: VM, now: float) -> None:

@@ -54,8 +54,8 @@ POOL, HEAVY_BASKET, LIGHT_BASKET = 0, 1, 2
 DEFAULT_MODELS: Tuple[DeviceModel, ...] = (A100_40GB,)
 
 
-class Tables:
-    """Per-fleet mask-indexed tables materialized in one array namespace.
+def _stack_host_tables(models: Tuple[DeviceModel, ...]) -> dict:
+    """Host-side (numpy) staging of the per-fleet tables.
 
     Each model's §5 tables are padded to the fleet-wide maximum mask-space
     (``1 << max(num_blocks)``) and profile count, then stacked along a
@@ -66,6 +66,57 @@ class Tables:
 
     Integer tables are widened to int32 so NumPy and JAX index/compare
     with the same value ranges (JAX would otherwise default differently).
+
+    Deliberately ``xp``-free: table *construction* is host work; the
+    ``xp``-parameterized :class:`Tables` only converts the finished
+    arrays (repro-lint's backend-purity rule enforces this split).
+    """
+    mts = [tables_for_model(m) for m in models]
+    M = len(mts)
+    NM = max(t.num_masks for t in mts)
+    NP = max(t.num_profiles for t in mts)
+
+    def pad(rows, fill, dtype):
+        """Stack per-model arrays padded to a common trailing shape."""
+        shape = (M, NM, NP, NP)[:1 + rows[0].ndim]
+        out = np.full(shape, fill, dtype=dtype)
+        for i, r in enumerate(rows):
+            out[(i,) + tuple(slice(0, s) for s in r.shape)] = r
+        return out
+
+    # sizes is (M, NP): pad rows manually (pad() assumes mask-major).
+    sizes = np.zeros((M, NP), np.int32)
+    cons = np.zeros((M, NP), bool)
+    for i, (m, t) in enumerate(zip(models, mts)):
+        sizes[i, :t.num_profiles] = t.profile_size
+        for ci in m.consolidatable:
+            cons[i, ci] = True
+    return dict(
+        num_masks=NM, num_profiles=NP,
+        fits=pad([t.fits for t in mts], False, bool),
+        pop=pad([t.popcount for t in mts], 0, np.int32),
+        cc_after=pad([t.cc_after for t in mts], -1, np.int32),
+        counts_after=pad([t.counts_after for t in mts], 0, np.int32),
+        assign_mask=pad([t.assign_mask for t in mts], 0, np.int32),
+        assign_start=pad([t.assign_start for t in mts], -1, np.int32),
+        frag=pad([t.frag for t in mts], 0.0, np.float32),
+        sizes=sizes, consolidatable=cons,
+        # Per-model scalars.
+        full_mask=np.array([m.full_mask for m in models], np.int32),
+        heavy=np.array([m.heavy_profile for m in models], np.int32),
+        lower_half=np.array([m.lower_half_free for m in models],
+                            np.int32),
+        upper_half=np.array([m.upper_half_free for m in models],
+                            np.int32),
+    )
+
+
+class Tables:
+    """Per-fleet mask-indexed tables materialized in one array namespace.
+
+    All construction happens host-side in :func:`_stack_host_tables`;
+    this class only moves the finished arrays into ``xp``'s namespace, so
+    the ``xp``-scoped code touches no bare numpy (backend purity).
     """
 
     def __init__(self, xp, models: Sequence[DeviceModel] = DEFAULT_MODELS):
@@ -73,48 +124,13 @@ class Tables:
         self.models: Tuple[DeviceModel, ...] = tuple(models)
         if not self.models:
             raise ValueError("Tables needs at least one device model")
-        mts = [tables_for_model(m) for m in self.models]
-        M = len(mts)
-        NM = max(t.num_masks for t in mts)
-        NP = max(t.num_profiles for t in mts)
-        self.num_models = M
-        self.num_masks = NM
-        self.num_profiles = NP
+        host = _stack_host_tables(self.models)
+        self.num_models = len(self.models)
+        self.num_masks = host.pop("num_masks")
+        self.num_profiles = host.pop("num_profiles")
         self.max_blocks = max(m.num_blocks for m in self.models)
-
-        def pad(rows, fill, dtype):
-            """Stack per-model arrays padded to a common trailing shape."""
-            shape = (M, NM, NP, NP)[:1 + rows[0].ndim]
-            out = np.full(shape, fill, dtype=dtype)
-            for i, r in enumerate(rows):
-                out[(i,) + tuple(slice(0, s) for s in r.shape)] = r
-            return xp.asarray(out)
-
-        self.fits = pad([t.fits for t in mts], False, bool)
-        self.pop = pad([t.popcount for t in mts], 0, np.int32)
-        self.cc_after = pad([t.cc_after for t in mts], -1, np.int32)
-        self.counts_after = pad([t.counts_after for t in mts], 0, np.int32)
-        self.assign_mask = pad([t.assign_mask for t in mts], 0, np.int32)
-        self.assign_start = pad([t.assign_start for t in mts], -1, np.int32)
-        self.frag = pad([t.frag for t in mts], 0.0, np.float32)
-        # sizes is (M, NP): pad rows manually (pad() assumes mask-major).
-        sizes = np.zeros((M, NP), np.int32)
-        cons = np.zeros((M, NP), bool)
-        for i, (m, t) in enumerate(zip(self.models, mts)):
-            sizes[i, :t.num_profiles] = t.profile_size
-            for ci in m.consolidatable:
-                cons[i, ci] = True
-        self.sizes = xp.asarray(sizes)
-        self.consolidatable = xp.asarray(cons)
-        # Per-model scalars.
-        self.full_mask = xp.asarray(
-            np.array([m.full_mask for m in self.models], np.int32))
-        self.heavy = xp.asarray(
-            np.array([m.heavy_profile for m in self.models], np.int32))
-        self.lower_half = xp.asarray(
-            np.array([m.lower_half_free for m in self.models], np.int32))
-        self.upper_half = xp.asarray(
-            np.array([m.upper_half_free for m in self.models], np.int32))
+        for name, arr in host.items():
+            setattr(self, name, xp.asarray(arr))
 
 
 _TABLES_CACHE: dict = {}

@@ -1,0 +1,359 @@
+"""repro-lint self-tests: one known violation per AST rule (plus a clean
+twin), ratchet semantics, the repo staying lint-clean, and the jaxpr
+gate — including that an injected ``astype(jnp.int64)`` trips it."""
+import ast
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from tools.lint import ratchet as R
+from tools.lint.ast_rules import (check_backend_purity,
+                                  check_donation_safety,
+                                  check_dtype_discipline,
+                                  check_recompile_hazard, run_rules)
+from tools.lint.common import SourceFile, iter_source_files
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def sf(src, rel="src/repro/core/policy_core.py"):
+    src = textwrap.dedent(src)
+    return SourceFile(rel_path=rel, source=src, tree=ast.parse(src))
+
+
+# ---------------------------------------------------------------------------
+# backend-purity
+# ---------------------------------------------------------------------------
+
+def test_backend_purity_flags_bare_np_in_xp_function():
+    bad = sf("""
+        import numpy as np
+        def scores(xp, free):
+            return np.maximum(free, 0)
+    """)
+    v = check_backend_purity([bad])
+    assert len(v) == 1
+    assert v[0].rule == "backend-purity" and v[0].code == "np.maximum"
+    assert v[0].scope == "scores"
+
+
+def test_backend_purity_clean_twin_and_host_helper():
+    good = sf("""
+        import numpy as np
+        import jax.numpy as jnp
+        def _stage_host(rows):        # xp-free helper: np is fine here
+            return np.asarray(rows)
+        def scores(xp, free):
+            return xp.maximum(free, 0)
+    """)
+    assert check_backend_purity([good]) == []
+
+
+def test_backend_purity_sees_through_aliases_and_nesting():
+    bad = sf("""
+        import numpy as onp
+        def outer(xp):
+            def inner(m):
+                return onp.zeros(m)
+            return inner
+    """)
+    v = check_backend_purity([bad])
+    assert len(v) == 1 and v[0].code == "np.zeros"
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline
+# ---------------------------------------------------------------------------
+
+def test_dtype_flags_packed_arith_and_64bit_literals():
+    bad = sf("""
+        import numpy as np
+        import jax.numpy as jnp
+        def step(tr, state):
+            k = tr["kind"] + 1              # packed arith, no widening
+            _vmpids = tr["vm_pids"]
+            off = _vmpids * 2               # via one-level dataflow
+            big = np.int64(3)               # 64-bit literal
+            jax.config.update("jax_enable_x64", True)
+            return k, off, big
+    """, rel="src/repro/core/batched.py")
+    codes = {v.code for v in check_dtype_discipline([bad])}
+    assert "packed-arith:kind" in codes
+    assert "packed-arith:vm_pids" in codes
+    assert "np.int64" in codes
+    assert "jax_enable_x64" in codes
+
+
+def test_dtype_clean_twin_widens_before_arith():
+    good = sf("""
+        import jax.numpy as jnp
+        def step(tr, state):
+            k = tr["kind"].astype(jnp.int32) + 1
+            _vmpids = tr["vm_pids"]
+            off = _vmpids[0].astype(jnp.int32) * 2
+            small = jnp.int32(3)
+            return k, off, small
+    """, rel="src/repro/core/batched.py")
+    assert check_dtype_discipline([good]) == []
+
+
+def test_dtype_string_dtype_in_call_flagged():
+    bad = sf("""
+        import numpy as np
+        def f(x):
+            return np.asarray(x, dtype="float64")
+    """, rel="src/repro/core/batched.py")
+    assert any(v.code == "dtype-str:float64"
+               for v in check_dtype_discipline([bad]))
+
+
+# ---------------------------------------------------------------------------
+# recompile-hazard
+# ---------------------------------------------------------------------------
+
+def test_recompile_flags_jit_in_loop_and_uncached_jit():
+    bad = sf("""
+        import jax
+        def sweep(xs):
+            outs = []
+            for x in xs:
+                outs.append(jax.jit(lambda v: v + 1)(x))  # per-iter jit
+            return outs
+        def run_once(tr):
+            fn = jax.jit(lambda v: v * 2)                 # uncached
+            return fn(tr)
+    """, rel="src/repro/core/batched.py")
+    codes = {v.code for v in check_recompile_hazard([bad])}
+    assert "jit-in-loop" in codes
+    assert "uncached-jit" in codes
+
+
+def test_recompile_clean_twin_routes_through_cache():
+    good = sf("""
+        import functools
+        import jax
+        from . import compile_cache
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def kernel(x, n):                  # module-level jit: fine
+            return x * n
+
+        def make_run(st):
+            def build():
+                return jax.jit(functools.partial(_scan_fn, st),
+                               donate_argnums=(0,))
+            return compile_cache.cached_replay_fn(st, build)
+    """, rel="src/repro/core/batched.py")
+    assert check_recompile_hazard([good]) == []
+
+
+def test_recompile_flags_nonfrozen_dataclass_static():
+    bad = sf("""
+        import dataclasses
+        import functools
+        import jax
+        from . import compile_cache
+
+        @dataclasses.dataclass
+        class Cfg:
+            policy: int = 0
+
+        def make_run(cfg: Cfg):
+            def build():
+                return jax.jit(functools.partial(_scan_fn, cfg))
+            return compile_cache.cached_replay_fn(cfg, build)
+    """, rel="src/repro/core/batched.py")
+    codes = {v.code for v in check_recompile_hazard([bad])}
+    assert "unhashable-cache-key:Cfg" in codes
+    assert "unhashable-jit-static:Cfg" in codes
+
+    frozen = sf(bad.source.replace("@dataclasses.dataclass",
+                                   "@dataclasses.dataclass(frozen=True)"),
+                rel="src/repro/core/batched.py")
+    assert check_recompile_hazard([frozen]) == []
+
+
+def test_recompile_flags_mutable_cache_key():
+    bad = sf("""
+        import jax
+        from . import compile_cache
+        def make_run(st):
+            return compile_cache.cached_replay_fn(
+                [st, "chunk"], lambda: jax.jit(_scan_fn))
+    """, rel="src/repro/core/streaming.py")
+    assert any(v.code == "mutable-cache-key"
+               for v in check_recompile_hazard([bad]))
+
+
+# ---------------------------------------------------------------------------
+# donation-safety
+# ---------------------------------------------------------------------------
+
+def test_donation_flags_read_after_donate():
+    bad = sf("""
+        import jax
+        jfn = jax.jit(_scan_fn, donate_argnums=(0,))
+        def run(state, tr, cap):
+            out = jfn(state, tr, cap)
+            return out, state["free"]      # reads the donated buffer
+    """, rel="src/repro/core/batched.py")
+    v = check_donation_safety([bad])
+    assert len(v) == 1 and v[0].code == "donated-reuse:state"
+
+
+def test_donation_clean_twin_rebinds_carry():
+    good = sf("""
+        import jax
+        from . import compile_cache
+        jfn = compile_cache.cached_replay_fn(
+            "k", lambda: jax.jit(_chunk_fn, donate_argnums=(0,)))
+        def run(state, chunks, cap):
+            for c in chunks:
+                state = jfn(state, c, cap)   # rebound: old carry is dead
+            return state
+    """, rel="src/repro/core/streaming.py")
+    assert check_donation_safety([good]) == []
+
+
+def test_donation_resolves_named_builders():
+    bad = sf("""
+        import jax
+        from . import compile_cache
+        def make(st):
+            def build():
+                return jax.jit(_scan_fn, donate_argnums=(0,))
+            jfn = compile_cache.cached_replay_fn(st, build)
+            def run(s0, tr):
+                out = jfn(s0, tr)
+                return out, s0
+            return run
+    """, rel="src/repro/core/batched.py")
+    v = check_donation_safety([bad])
+    assert len(v) == 1 and v[0].code == "donated-reuse:s0"
+
+
+# ---------------------------------------------------------------------------
+# ratchet semantics
+# ---------------------------------------------------------------------------
+
+def _one_violation():
+    bad = sf("""
+        import numpy as np
+        def f(xp, a):
+            return np.abs(a)
+    """)
+    return check_backend_purity([bad])
+
+
+def test_ratchet_blocks_new_allows_grandfathered():
+    v = _one_violation()
+    errors, _ = R.compare(v, {})
+    assert len(errors) == 1 and "(new)" in errors[0]
+    entries = {v[0].key: {"count": 1, "reason": "test"}}
+    errors, notes = R.compare(v, entries)
+    assert errors == [] and notes == []
+    # Count growth trips it again.
+    errors, _ = R.compare(v + v, entries)
+    assert len(errors) == 1 and "grew" in errors[0]
+
+
+def test_ratchet_reports_slack():
+    v = _one_violation()
+    entries = {v[0].key: {"count": 2, "reason": "test"},
+               ("x", "y", "z", "w"): {"count": 1, "reason": "gone"}}
+    errors, notes = R.compare(v, entries)
+    assert errors == []
+    assert any("shrank" in n for n in notes)
+    assert any("no longer occurs" in n for n in notes)
+
+
+def test_ratchet_roundtrip(tmp_path):
+    v = _one_violation()
+    p = tmp_path / "ratchet.json"
+    R.save_ratchet(p, R.updated_entries(v, {}))
+    entries = R.load_ratchet(p)
+    errors, _ = R.compare(v, entries)
+    assert errors == []
+
+
+# ---------------------------------------------------------------------------
+# The repo itself stays clean
+# ---------------------------------------------------------------------------
+
+def test_repo_ast_rules_clean_after_ratchet():
+    files = iter_source_files(REPO, ("src/repro/core",
+                                     "src/repro/kernels"))
+    violations = run_rules(files)
+    entries = R.load_ratchet(REPO / "tools" / "lint" / "ratchet.json")
+    errors, _ = R.compare(violations, entries)
+    assert errors == [], "\n".join(errors)
+
+
+def test_backend_purity_zero_in_policy_core():
+    files = iter_source_files(REPO, ("src/repro/core/policy_core.py",))
+    assert run_rules(files, rules=["backend-purity"]) == []
+
+
+# ---------------------------------------------------------------------------
+# jaxpr gate
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gate_mod():
+    jg = pytest.importorskip("tools.lint.jaxpr_gate")
+    return jg
+
+
+def test_jaxpr_gate_passes_on_plain_variant(gate_mod):
+    errors, notes, results = gate_mod.run_gate(variants=("plain",))
+    assert errors == [], "\n".join(errors)
+    assert len(results) == 5          # one per registry policy
+    assert results["MECC:plain"]["num_while"] == 1   # the window expiry
+    assert results["FF:plain"]["num_while"] == 0
+
+
+def test_jaxpr_gate_sharded_variant(gate_mod):
+    import jax
+    if len(jax.devices()) < gate_mod.NUM_SHARDS:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_"
+                    "device_count=2 (python -m tools.lint sets it)")
+    errors, _, results = gate_mod.run_gate(variants=("sharded",))
+    assert errors == [], "\n".join(errors)
+    assert len(results) == 5
+
+
+def test_jaxpr_gate_catches_injected_int64_astype(gate_mod, monkeypatch):
+    import jax.numpy as jnp
+    from repro.core import policy_core as pc
+
+    orig = pc.placement_scores
+
+    def poisoned(policy, xp, T, mid, free, prof, fits, mecc_w):
+        return orig(policy, xp, T, mid, free, prof,
+                    fits, mecc_w).astype(jnp.int64)
+
+    monkeypatch.setattr(pc, "placement_scores", poisoned)
+    events = gate_mod.mixed_fixture()
+    _closed, truncations = gate_mod.trace_variant(
+        events, pc.FF, "FF", "plain")
+    assert truncations, ("x64-disabled astype(int64) must surface as a "
+                         "truncation warning")
+
+
+def test_jaxpr_gate_catches_fingerprint_drift(gate_mod, tmp_path):
+    base = json.loads(
+        (REPO / "tools" / "lint" / "baselines.json").read_text())
+    key = "FF:plain"
+    base["entries"][key]["ops"]["scan"] = \
+        base["entries"][key]["ops"].get("scan", 0) + 1
+    base["entries"][key]["num_while"] = -1   # force while-count error too
+    p = tmp_path / "baselines.json"
+    p.write_text(json.dumps(base))
+    errors, _, _ = gate_mod.run_gate(variants=("plain",),
+                                     baselines_path=p)
+    same_jax = base["jax_version"] == __import__("jax").__version__
+    assert any("while" in e for e in errors)
+    if same_jax:
+        assert any("fingerprint mismatch" in e for e in errors)

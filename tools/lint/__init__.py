@@ -1,0 +1,20 @@
+"""repro-lint: static analysis enforcing the replay engine's
+decision-invariance contracts.
+
+Two layers, run as ``python -m tools.lint`` (CI gates on its exit code):
+
+* AST rules (:mod:`tools.lint.ast_rules`): backend-purity,
+  dtype-discipline, recompile-hazard, donation-safety — pure stdlib
+  ``ast``, ratcheted via ``tools/lint/ratchet.json``.
+* jaxpr gate (:mod:`tools.lint.jaxpr_gate`): traces every registry
+  policy's batched step (plain / chunked / K=2 sharded) on a mixed
+  A30+A100+H100 fixture and pins 64-bit-freedom, while-count and a
+  structural fingerprint against ``tools/lint/baselines.json``.
+
+See docs/ARCHITECTURE.md ("Invariants & static analysis").
+"""
+from .common import SourceFile, Violation, iter_source_files
+from .ast_rules import RULES, run_rules
+
+__all__ = ["SourceFile", "Violation", "iter_source_files", "RULES",
+           "run_rules"]

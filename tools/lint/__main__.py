@@ -1,0 +1,107 @@
+"""CLI entry point: ``python -m tools.lint``.
+
+Exit 0 iff (a) every AST violation is covered by the ratchet and (b) the
+jaxpr gate passes for all 5 registry policies x 3 replay variants.
+
+Flags:
+    --no-jaxpr            AST rules only (fast; no jax import)
+    --ast-only            alias for --no-jaxpr
+    --update-baselines    re-pin tools/lint/baselines.json
+    --update-ratchet      rewrite tools/lint/ratchet.json from the
+                          current violations (review reasons!)
+    --report PATH         write a JSON violation report (CI artifact)
+    --rules a,b           run only the named AST rules
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# The sharded jaxpr variant traces under a 2-device host mesh; XLA reads
+# this before jax initializes, so it must be set before any jax import
+# (tools.lint.jaxpr_gate imports jax lazily for exactly this reason).
+_FLAG = "--xla_force_host_platform_device_count=2"
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+# Directories the AST layer scans (rules filter further by path).
+SCAN_DIRS = ("src/repro/core", "src/repro/kernels")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.lint")
+    ap.add_argument("--no-jaxpr", "--ast-only", action="store_true",
+                    dest="no_jaxpr")
+    ap.add_argument("--update-baselines", action="store_true")
+    ap.add_argument("--update-ratchet", action="store_true")
+    ap.add_argument("--report", type=Path, default=None)
+    ap.add_argument("--rules", type=str, default=None,
+                    help="comma-separated subset of AST rules")
+    args = ap.parse_args(argv)
+
+    from . import ast_rules, ratchet
+    from .common import iter_source_files
+
+    files = iter_source_files(REPO_ROOT, SCAN_DIRS)
+    rules = args.rules.split(",") if args.rules else None
+    violations = ast_rules.run_rules(files, rules)
+
+    ratchet_path = Path(__file__).with_name("ratchet.json")
+    entries = ratchet.load_ratchet(ratchet_path)
+    if args.update_ratchet:
+        ratchet.save_ratchet(
+            ratchet_path, ratchet.updated_entries(violations, entries))
+        print(f"ratchet written: {ratchet_path}")
+        entries = ratchet.load_ratchet(ratchet_path)
+    ast_errors, ast_notes = ratchet.compare(violations, entries)
+
+    report = {
+        "ast": {
+            "violations": [v.__dict__ for v in violations],
+            "errors": ast_errors,
+            "notes": ast_notes,
+        },
+    }
+    print(f"repro-lint: {len(files)} files, {len(violations)} AST "
+          f"violation(s), {len(ast_errors)} un-ratcheted group(s)")
+    for v in violations:
+        covered = "" if any(e.startswith(ratchet.key_to_str(v.key))
+                            for e in ast_errors) else " [ratcheted]"
+        print(f"  {v.format()}{covered}")
+    for e in ast_errors:
+        print(f"ERROR [ast] {e}")
+    for n in ast_notes:
+        print(f"note [ast] {n}")
+
+    gate_errors = []
+    if not args.no_jaxpr:
+        from . import jaxpr_gate
+        gate_errors, gate_notes, results = jaxpr_gate.run_gate(
+            update=args.update_baselines)
+        report["jaxpr"] = {"errors": gate_errors, "notes": gate_notes,
+                          "fingerprints": results}
+        print(f"jaxpr gate: {len(results)} policy-variant trace(s), "
+              f"{len(gate_errors)} error(s)")
+        for e in gate_errors:
+            print(f"ERROR [jaxpr] {e}")
+        for n in gate_notes:
+            print(f"note [jaxpr] {n}")
+
+    if args.report:
+        args.report.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"report written: {args.report}")
+
+    ok = not ast_errors and not gate_errors
+    print("repro-lint: " + ("OK" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

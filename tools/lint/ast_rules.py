@@ -1,0 +1,518 @@
+"""Layer 1 of repro-lint: AST rules over the engine sources.
+
+Four rules, each enforcing one of the engine's decision-invariance
+contracts (docs/ARCHITECTURE.md "Invariants & static analysis"):
+
+``backend-purity``
+    In declared backend-agnostic modules (``BACKEND_AGNOSTIC_MODULES``),
+    any ``np.`` / ``jnp.`` attribute use inside a function that takes the
+    ``xp`` namespace parameter bypasses the backend parameterization —
+    the same code path must drive numpy and jax.numpy bit-identically.
+    Host-side staging belongs in ``xp``-free helpers.
+
+``dtype-discipline``
+    In the engine dirs (``ENGINE_DIRS``): (a) arithmetic directly on a
+    packed trace field (uint8 ``kind``, int16 ``profile`` / ``vm_pids`` /
+    ``arr_pids``) without an explicit ``.astype`` widening risks silent
+    overflow / promotion drift — widening must happen per gathered
+    scalar inside the scan step; (b) literal 64-bit dtypes
+    (``np.int64``, ``jnp.float64``, ``dtype="int64"``, …) and
+    ``jax.config.update("jax_enable_x64", ...)`` — decision state is
+    32-bit by contract, and 64-bit temporaries double trace-construction
+    RSS.
+
+``recompile-hazard``
+    ``jax.jit`` / ``pl.pallas_call`` constructed inside a loop, or
+    inside a function that does not route through
+    ``repro.core.compile_cache.cached_replay_fn``, builds a fresh
+    executable per call — exactly what the shape-bucketed compile cache
+    exists to prevent.  Also flags unhashable compile-cache keys /
+    jit-closure statics: mutable literals, or instances of non-frozen
+    dataclasses (resolved through parameter annotations).
+
+``donation-safety``
+    An argument passed through a ``donate_argnums`` position is consumed
+    by XLA — reading the same name afterwards in the same scope observes
+    freed buffers.  The rule resolves donating callables both from
+    direct ``jax.jit(..., donate_argnums=...)`` assignments and through
+    ``cached_replay_fn(key, build)`` builders (named or lambda).
+
+Every rule is a pure function ``(files) -> [Violation]`` over parsed
+:class:`~tools.lint.common.SourceFile` objects, so tests can run them on
+fixture snippets verbatim.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .common import (SourceFile, Violation, ancestors, attach_parents,
+                     dotted_name, enclosing_functions, module_aliases,
+                     scope_of)
+
+# Modules whose array code must stay parameterized over ``xp``.
+BACKEND_AGNOSTIC_MODULES = ("src/repro/core/policy_core.py",)
+
+# Engine sources covered by the dtype / recompile / donation rules.
+ENGINE_DIRS = ("src/repro/core", "src/repro/kernels")
+
+# Packed (sub-int32) trace fields: any arithmetic on these must widen.
+PACKED_FIELDS = frozenset({"kind", "profile", "vm_pids", "arr_pids"})
+
+WIDE_DTYPES = frozenset({"int64", "uint64", "float64", "complex128"})
+
+_NS_TARGETS = {"numpy": "np", "jax.numpy": "jnp"}
+
+_JIT_NAMES = frozenset({"jax.jit", "jit"})
+_PALLAS_NAMES = frozenset({"pl.pallas_call", "pallas.pallas_call",
+                           "pallas_call",
+                           "jax.experimental.pallas.pallas_call"})
+
+
+def in_engine_dirs(rel_path: str) -> bool:
+    return any(rel_path.startswith(d + "/") or rel_path == d
+               for d in ENGINE_DIRS)
+
+
+def _decorator_nodes(tree: ast.Module) -> Set[int]:
+    """ids of every node living inside a decorator expression."""
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            for dec in node.decorator_list:
+                out.update(id(n) for n in ast.walk(dec))
+    return out
+
+
+def _xp_scoped(node: ast.AST) -> bool:
+    """Is ``node`` (transitively) inside a function taking ``xp``?"""
+    for fn in enclosing_functions(node):
+        args = fn.args
+        names = [a.arg for a in (args.posonlyargs + args.args
+                                 + args.kwonlyargs)]
+        if "xp" in names:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# backend-purity
+# ---------------------------------------------------------------------------
+
+def check_backend_purity(files: Sequence[SourceFile]) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in files:
+        aliases = module_aliases(sf.tree, _NS_TARGETS)
+        if not aliases:
+            continue
+        attach_parents(sf.tree)
+        for node in ast.walk(sf.tree):
+            # Innermost attribute on a bare np/jnp module name.
+            if not (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in aliases):
+                continue
+            if not _xp_scoped(node):
+                continue
+            canon = aliases[node.value.id]
+            out.append(Violation(
+                rule="backend-purity", path=sf.rel_path,
+                line=node.lineno, scope=scope_of(node),
+                code=f"{canon}.{node.attr}",
+                message=(f"bare `{node.value.id}.{node.attr}` inside an "
+                         "`xp`-parameterized function — route every "
+                         "array op through `xp` (host-side staging "
+                         "belongs in an xp-free helper)")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline
+# ---------------------------------------------------------------------------
+
+def _packed_field_of(node: ast.AST,
+                     packed_names: Dict[str, str]) -> Optional[str]:
+    """The packed-trace field a reference resolves to, or None.
+
+    Recognizes ``tr["kind"]``-style dict gathers, ``events.kind``-style
+    attributes, names assigned from either, and subscripts of any of
+    those (``_vmpids[vi]``).
+    """
+    if isinstance(node, ast.Subscript):
+        sl = node.slice
+        if isinstance(sl, ast.Constant) and sl.value in PACKED_FIELDS:
+            return sl.value
+        return _packed_field_of(node.value, packed_names)
+    if isinstance(node, ast.Attribute) and node.attr in PACKED_FIELDS:
+        return node.attr
+    if isinstance(node, ast.Name):
+        return packed_names.get(node.id)
+    return None
+
+
+def _collect_packed_names(tree: ast.Module) -> Dict[str, str]:
+    """One-level dataflow: ``_vmpids = tr["vm_pids"]`` (incl. tuple
+    assigns) makes ``_vmpids`` a packed name."""
+    packed: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt, val = node.targets[0], node.value
+        pairs: List[Tuple[ast.AST, ast.AST]] = []
+        if isinstance(tgt, ast.Tuple) and isinstance(val, ast.Tuple) \
+                and len(tgt.elts) == len(val.elts):
+            pairs = list(zip(tgt.elts, val.elts))
+        else:
+            pairs = [(tgt, val)]
+        for t, v in pairs:
+            if isinstance(t, ast.Name):
+                field = _packed_field_of(v, {})
+                if field:
+                    packed[t.id] = field
+    return packed
+
+
+def _is_widened(node: ast.AST) -> bool:
+    """True when the packed ref is immediately ``.astype(...)``-ed."""
+    parent = getattr(node, "_lint_parent", None)
+    return (isinstance(parent, ast.Attribute)
+            and parent.attr in ("astype", "view"))
+
+
+def check_dtype_discipline(files: Sequence[SourceFile]) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in files:
+        aliases = module_aliases(sf.tree, _NS_TARGETS)
+        attach_parents(sf.tree)
+        packed_names = _collect_packed_names(sf.tree)
+
+        def flag(node, code, msg):
+            out.append(Violation(
+                rule="dtype-discipline", path=sf.rel_path,
+                line=node.lineno, scope=scope_of(node), code=code,
+                message=msg))
+
+        for node in ast.walk(sf.tree):
+            # (b) literal 64-bit dtypes.
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in aliases
+                    and node.attr in WIDE_DTYPES):
+                canon = aliases[node.value.id]
+                flag(node, f"{canon}.{node.attr}",
+                     f"literal 64-bit dtype `{node.value.id}."
+                     f"{node.attr}` — decision/trace state is 32-bit by "
+                     "contract (ratchet deliberate host-side uses)")
+            elif (isinstance(node, ast.Constant)
+                    and isinstance(node.value, str)
+                    and node.value in WIDE_DTYPES
+                    and isinstance(getattr(node, "_lint_parent", None),
+                                   (ast.Call, ast.keyword))):
+                flag(node, f"dtype-str:{node.value}",
+                     f'string dtype "{node.value}" passed to a call')
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func) or ""
+                if (name.endswith("config.update") and node.args
+                        and isinstance(node.args[0], ast.Constant)
+                        and node.args[0].value == "jax_enable_x64"):
+                    flag(node, "jax_enable_x64",
+                         "jax_enable_x64 toggles 64-bit tracing "
+                         "globally — forbidden in engine code")
+            # (a) un-widened arithmetic on packed trace fields.
+            operands: Iterable[ast.AST] = ()
+            if isinstance(node, ast.BinOp):
+                operands = (node.left, node.right)
+            elif isinstance(node, ast.UnaryOp) \
+                    and isinstance(node.op, (ast.USub, ast.Invert)):
+                operands = (node.operand,)
+            elif isinstance(node, ast.AugAssign):
+                operands = (node.target, node.value)
+            for op in operands:
+                field = _packed_field_of(op, packed_names)
+                if field and not _is_widened(op):
+                    flag(op, f"packed-arith:{field}",
+                         f"arithmetic on packed trace field `{field}` "
+                         "without an explicit `.astype` widening — "
+                         "packed dtypes must be widened per gather "
+                         "inside the scan step")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# recompile-hazard
+# ---------------------------------------------------------------------------
+
+def _dataclass_registry(files: Sequence[SourceFile]) -> Dict[str, bool]:
+    """{class name: frozen?} for every @dataclass in the file set."""
+    reg: Dict[str, bool] = {}
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                name = dotted_name(target) or ""
+                if name.split(".")[-1] != "dataclass":
+                    continue
+                frozen = False
+                if isinstance(dec, ast.Call):
+                    frozen = any(
+                        kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                        for kw in dec.keywords)
+                reg[node.name] = frozen
+    return reg
+
+
+def _annotation_of(name: str, node: ast.AST) -> Optional[str]:
+    """Resolve ``name``'s parameter annotation in enclosing functions."""
+    for fn in enclosing_functions(node):
+        if isinstance(fn, ast.Lambda):
+            continue
+        for a in (fn.args.posonlyargs + fn.args.args
+                  + fn.args.kwonlyargs):
+            if a.arg == name and a.annotation is not None:
+                ann = dotted_name(a.annotation)
+                if ann:
+                    return ann.split(".")[-1]
+                if isinstance(a.annotation, ast.Constant):
+                    return str(a.annotation.value).split(".")[-1]
+    return None
+
+
+def _mutable_literal(node: ast.AST) -> Optional[ast.AST]:
+    for n in ast.walk(node):
+        if isinstance(n, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            return n
+    return None
+
+
+def check_recompile_hazard(files: Sequence[SourceFile]) -> List[Violation]:
+    out: List[Violation] = []
+    dataclasses_frozen = _dataclass_registry(files)
+    for sf in files:
+        attach_parents(sf.tree)
+        deco_nodes = _decorator_nodes(sf.tree)
+
+        def flag(node, code, msg):
+            out.append(Violation(
+                rule="recompile-hazard", path=sf.rel_path,
+                line=node.lineno, scope=scope_of(node), code=code,
+                message=msg))
+
+        def check_static_operand(arg: ast.AST, node: ast.Call,
+                                 where: str) -> None:
+            lit = _mutable_literal(arg)
+            if lit is not None:
+                flag(node, f"mutable-{where}",
+                     f"mutable literal in a {where} — compile-cache "
+                     "keys and jit statics must be hashable")
+                return
+            if isinstance(arg, ast.Name):
+                ann = _annotation_of(arg.id, node)
+                if ann is not None and ann in dataclasses_frozen \
+                        and not dataclasses_frozen[ann]:
+                    flag(node, f"unhashable-{where}:{ann}",
+                         f"`{arg.id}` is a non-frozen dataclass "
+                         f"`{ann}` used as a {where} — declare it "
+                         "@dataclass(frozen=True)")
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call) or id(node) in deco_nodes:
+                continue
+            name = dotted_name(node.func) or ""
+            if name.endswith("cached_replay_fn") and node.args:
+                check_static_operand(node.args[0], node, "cache-key")
+                continue
+            is_jit = name in _JIT_NAMES
+            is_pallas = name in _PALLAS_NAMES
+            if not (is_jit or is_pallas):
+                continue
+            kind = "jit" if is_jit else "pallas_call"
+            if is_jit and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Call) and \
+                        (dotted_name(first.func) or "").endswith("partial"):
+                    for parg in first.args[1:]:
+                        check_static_operand(parg, node, "jit-static")
+            in_loop = any(isinstance(a, (ast.For, ast.While))
+                          for a in ancestors(node))
+            fns = [f for f in enclosing_functions(node)
+                   if not isinstance(f, ast.Lambda)]
+            lambdas_only = not fns and enclosing_functions(node)
+            if in_loop:
+                flag(node, f"{kind}-in-loop",
+                     f"`{name}` constructed inside a loop builds a "
+                     "fresh executable per iteration — hoist it and "
+                     "route through repro.core.compile_cache")
+                continue
+            if not fns and not lambdas_only:
+                continue            # module level (incl. decorators): fine
+            top = fns[-1] if fns else None
+            routed = top is not None and any(
+                isinstance(n, ast.Call)
+                and (dotted_name(n.func) or "").endswith(
+                    "cached_replay_fn")
+                for n in ast.walk(top))
+            if not routed:
+                flag(node, f"uncached-{kind}",
+                     f"`{name}` constructed inside "
+                     f"`{top.name if top else '<lambda>'}` without "
+                     "routing through "
+                     "repro.core.compile_cache.cached_replay_fn — "
+                     "every call builds/reuses executables outside the "
+                     "replay cache")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# donation-safety
+# ---------------------------------------------------------------------------
+
+def _donated_indices(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums of a ``jax.jit`` call, or None."""
+    if (dotted_name(call.func) or "") not in _JIT_NAMES:
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            idx = tuple(e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int))
+            return idx or None
+    return None
+
+
+def _builder_donation(fn_node: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Donated indices of the jit call a builder returns, if any."""
+    if isinstance(fn_node, ast.Lambda):
+        body: Iterable[ast.AST] = ast.walk(fn_node.body)
+    else:
+        body = ast.walk(fn_node)
+    for n in body:
+        if isinstance(n, ast.Call):
+            idx = _donated_indices(n)
+            if idx:
+                return idx
+    return None
+
+
+def _donating_callables(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """{name: donated indices} for names bound to donating callables."""
+    # Named local builders: ``def build(): return jax.jit(..., donate)``.
+    builders: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            idx = _builder_donation(node)
+            if idx:
+                builders[node.name] = idx
+    donating: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1 \
+                or not isinstance(node.targets[0], ast.Name):
+            continue
+        name, val = node.targets[0].id, node.value
+        if not isinstance(val, ast.Call):
+            continue
+        idx = _donated_indices(val)                      # X = jax.jit(...)
+        if idx:
+            donating[name] = idx
+            continue
+        callee = dotted_name(val.func) or ""
+        if callee.endswith("cached_replay_fn") and len(val.args) >= 2:
+            build = val.args[1]
+            if isinstance(build, ast.Lambda):
+                idx = _builder_donation(build)
+            elif isinstance(build, ast.Name):
+                idx = builders.get(build.id)
+            else:
+                idx = None
+            if idx:
+                donating[name] = idx
+    return donating
+
+
+def check_donation_safety(files: Sequence[SourceFile]) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in files:
+        attach_parents(sf.tree)
+        donating = _donating_callables(sf.tree)
+        if not donating:
+            continue
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in donating):
+                continue
+            fns = enclosing_functions(node)
+            scope_node: ast.AST = fns[0] if fns else sf.tree
+            stmt = node
+            for anc in ancestors(node):
+                if isinstance(anc, ast.stmt):
+                    stmt = anc
+                    break
+            rebound: Set[str] = set()
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            rebound.add(n.id)
+            in_call = {id(n) for n in ast.walk(node)}
+            for i in donating[node.func.id]:
+                if i >= len(node.args) or not isinstance(node.args[i],
+                                                         ast.Name):
+                    continue
+                donated = node.args[i].id
+                if donated in rebound:
+                    continue        # x = f(x, ...): old binding is dead
+                for n in ast.walk(scope_node):
+                    if (isinstance(n, ast.Name) and n.id == donated
+                            and isinstance(n.ctx, ast.Load)
+                            and id(n) not in in_call
+                            and (n.lineno, n.col_offset)
+                            > (node.lineno, node.col_offset)):
+                        out.append(Violation(
+                            rule="donation-safety", path=sf.rel_path,
+                            line=n.lineno, scope=scope_of(node),
+                            code=f"donated-reuse:{donated}",
+                            message=(f"`{donated}` is donated to "
+                                     f"`{node.func.id}` (arg {i}) on "
+                                     f"line {node.lineno} but read "
+                                     "again afterwards — donated "
+                                     "buffers are consumed; rebuild or "
+                                     "rebind the state instead")))
+                        break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+RULES = {
+    "backend-purity": (check_backend_purity,
+                       lambda p: p in BACKEND_AGNOSTIC_MODULES),
+    "dtype-discipline": (check_dtype_discipline, in_engine_dirs),
+    "recompile-hazard": (check_recompile_hazard, in_engine_dirs),
+    "donation-safety": (check_donation_safety, in_engine_dirs),
+}
+
+
+def run_rules(files: Sequence[SourceFile],
+              rules: Optional[Sequence[str]] = None) -> List[Violation]:
+    """Run (a subset of) the AST rules, each over the files its path
+    filter selects."""
+    out: List[Violation] = []
+    for name, (check, selects) in RULES.items():
+        if rules is not None and name not in rules:
+            continue
+        selected = [sf for sf in files if selects(sf.rel_path)]
+        out.extend(check(selected))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule, v.code))
