@@ -27,6 +27,14 @@ sequential Python engine, and — when more than one XLA device is visible
 policies through the sharded shard_map path and asserts decision parity
 (``sharded_decisions_match``).
 
+With ``REPRO_OBS=1`` the run executes under the flight recorder
+(``repro.obs``): chunked rungs emit per-chunk spans into a JSONL file
+(``REPRO_OBS_JSONL``, default ``BENCH_obs.jsonl``), and the base rung is
+additionally replayed with in-scan telemetry enabled — the measured
+``telemetry.overhead_ratio`` (steady-state, on vs off) and its
+decision parity land in the JSON, gated <= 5% by
+``benchmarks/check_perf.py``.
+
 The JSON keeps the legacy top-level keys (CI's regression gate,
 ``benchmarks/check_perf.py``, compares them against the committed
 baseline) and appends a ``history`` entry (git sha, events/sec, peak
@@ -34,6 +42,7 @@ fleet size, peak RSS) per run, preserving prior entries.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import subprocess
@@ -46,6 +55,7 @@ from repro.core import compile_cache
 from repro.core import streaming as S
 from repro.core.bucketing import bucket_shape, pad_events
 from repro.core.grmu import GRMU
+from repro.obs import inscan, recorder as obs_recorder
 from repro.sim.engine import simulate
 from repro.workload.alibaba import TraceConfig, generate
 from repro.workload.synthetic import SyntheticConfig, generate_events
@@ -234,6 +244,46 @@ def _sharded_parity(base_spec: str) -> dict:
     return {"num_shards": k, "match": match, "all_match": ok}
 
 
+def _telemetry_overhead(ev_base):
+    """Telemetry-on vs telemetry-off steady-state timing on the base
+    rung (same padded trace, GRMU).  Returns the BENCH ``telemetry``
+    block plus the telemetry-enabled SimResult and ReplayTelemetry (for
+    the flight-recorder JSONL).  ``overhead_ratio`` is gated <= 5% by
+    benchmarks/check_perf.py; ``decisions_match`` compares every
+    decision output array between the two compiled programs."""
+    import jax
+    pv0 = pad_events(ev_base)
+    cap = B.default_heavy_capacity(pv0)
+    fn_off = B.make_replay(pv0, B.GRMU, **GRMU_KW)
+    fn_on = B.make_replay(pv0, B.GRMU, telemetry=True, **GRMU_KW)
+    out_off, _ = _timed_replay(fn_off, cap)
+    out_on, _ = _timed_replay(fn_on, cap)
+    match = all(np.array_equal(np.asarray(out_on[k]),
+                               np.asarray(out_off[k])) for k in out_off)
+    # Interleave off/on rounds so a transient load spike hits both
+    # variants instead of skewing the ratio one way; min-of-rounds is
+    # the steady-state estimate for each.
+    off_us = on_us = float("inf")
+    for _ in range(6):
+        _, o = timed(lambda: _timed_replay(fn_off, cap)[0], repeats=1)
+        _, n = timed(lambda: _timed_replay(fn_on, cap)[0], repeats=1)
+        off_us, on_us = min(off_us, o), min(on_us, n)
+    overhead = on_us / off_us - 1.0 if off_us > 0 else 0.0
+    out_on = jax.device_get(out_on)
+    res_on = B.result_from_arrays(pv0, B.GRMU, out_on)
+    tele = inscan.telemetry_from_arrays(pv0, out_on)
+    emit("replay.telemetry_overhead", on_us,
+         f"off_us={off_us:.0f} ratio={overhead:+.3f} "
+         f"decisions_match={int(match)}")
+    block = {"enabled": True,
+             "telemetry_off_us": off_us,
+             "telemetry_on_us": on_us,
+             "overhead_ratio": overhead,
+             "decisions_match": bool(match),
+             "rejection_reasons": dict(res_on.rejection_reasons)}
+    return block, res_on, tele
+
+
 def _load_history(path: str) -> list:
     """Carry forward (or seed) the per-PR perf trajectory."""
     try:
@@ -260,8 +310,22 @@ def _load_history(path: str) -> list:
 
 
 def run() -> None:
-    compile_cache.ensure_persistent_cache()
     ladder = [s.strip() for s in LADDER.split(",") if s.strip()]
+    # REPRO_OBS=1 runs the whole ladder under the flight recorder: the
+    # chunked rungs emit chunk.* spans, and a telemetry-enabled replay
+    # of the base rung is timed against telemetry-off (<= 5% gate).
+    if os.environ.get("REPRO_OBS") == "1":
+        with obs_recorder.record(
+                os.environ.get("REPRO_OBS_JSONL", "BENCH_obs.jsonl"),
+                meta={"bench": "batched_engine",
+                      "ladder": ladder}) as rec:
+            _run(ladder, rec)
+    else:
+        _run(ladder, None)
+
+
+def _run(ladder, rec) -> None:
+    compile_cache.ensure_persistent_cache()
     base = ladder[0]
     if not base.startswith("alibaba:"):
         raise ValueError("the ladder's base rung must be alibaba:<scale>")
@@ -310,6 +374,13 @@ def run() -> None:
          f"per_replay_us={us_sweep/len(fracs):.0f} "
          f"accepted@0.3={int(sweep[2].sum())}")
 
+    telemetry = {"enabled": False, "skip_reason": "REPRO_OBS unset"}
+    if rec is not None:
+        telemetry, res_t, tele_t = _telemetry_overhead(ev_base)
+        rec.result(res_t)
+        rec.telemetry(tele_t)
+        rec.cache_stats()
+
     peak_gpus = max(r["num_gpus"] for r in rungs)
     history = _load_history(OUT_PATH)
     history.append({"sha": _git_sha(),
@@ -341,6 +412,7 @@ def run() -> None:
             "chunked_decisions_match": chunked_decisions_match,
             "sharded": sharded,
             "sharded_decisions_match": sharded.get("all_match"),
+            "telemetry": telemetry,
             "compile_cache": compile_cache.cache_stats(),
             "history": history,
         }, f, indent=2)

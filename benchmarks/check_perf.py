@@ -12,6 +12,11 @@ Fails (exit 1) when any of:
     diverged from the unchunked scan — absent means not measured);
   * any rung's ``compile_amortization_ratio`` exceeds 0.05 (a second
     trace from an already-seen bucket recompiled);
+  * the run measured in-scan telemetry (``telemetry.enabled``) and
+    either its decisions diverged from telemetry-off or its
+    ``overhead_ratio`` exceeds ``--telemetry-tol`` (default 5%, env
+    ``PERF_TELEMETRY_TOL``); a run without telemetry (``REPRO_OBS``
+    unset) is *skipped* with an explicit reason, never failed;
   * the base rung's ``batched_events_per_sec`` regressed more than
     ``--tol`` (default 30%, env ``PERF_REGRESS_TOL``) vs the baseline;
   * any rung present in BOTH files regressed its ``peak_rss_bytes`` by
@@ -34,10 +39,12 @@ import json
 import sys
 
 AMORTIZE_MAX_RATIO = 0.05
+TELEMETRY_MAX_OVERHEAD = 0.05
 
 
 def check(new: dict, base: dict, tol: float,
-          rss_tol: float = 0.30) -> tuple:
+          rss_tol: float = 0.30,
+          telemetry_tol: float = TELEMETRY_MAX_OVERHEAD) -> tuple:
     """Returns ``(errors, skips)``: gate failures, and per-rung
     skip-reason strings for rungs that could not be compared."""
     errors = []
@@ -45,6 +52,24 @@ def check(new: dict, base: dict, tol: float,
     if not new.get("decisions_match", False):
         errors.append("decisions_match is false: batched replay diverged "
                       "from the sequential engine")
+    tel = new.get("telemetry") or {}
+    if tel.get("enabled"):
+        if tel.get("decisions_match") is False:
+            errors.append(
+                "telemetry.decisions_match is false: the telemetry-on "
+                "replay diverged from telemetry-off — the in-scan plane "
+                "must be decision-neutral")
+        ratio = tel.get("overhead_ratio")
+        if ratio is not None and ratio > telemetry_tol:
+            errors.append(
+                f"telemetry overhead {ratio * 100:.1f}% > "
+                f"{telemetry_tol:.0%} budget (telemetry-on "
+                f"{tel.get('telemetry_on_us', 0):.0f} us vs off "
+                f"{tel.get('telemetry_off_us', 0):.0f} us)")
+    else:
+        skips.append(
+            "skipping telemetry-overhead gate: obs was off for this run "
+            "(REPRO_OBS unset) — no on-vs-off timing was measured")
     if new.get("sharded_decisions_match") is False:
         errors.append("sharded_decisions_match is false: shard_map replay "
                       f"diverged ({new.get('sharded')})")
@@ -104,18 +129,27 @@ def main() -> None:
     ap.add_argument("--rss-tol", type=float,
                     default=float(os.environ.get("PERF_RSS_TOL",
                                                  "0.30")))
+    ap.add_argument("--telemetry-tol", type=float,
+                    default=float(os.environ.get(
+                        "PERF_TELEMETRY_TOL",
+                        str(TELEMETRY_MAX_OVERHEAD))))
     args = ap.parse_args()
     with open(args.new) as f:
         new = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    errors, skips = check(new, base, args.tol, args.rss_tol)
+    errors, skips = check(new, base, args.tol, args.rss_tol,
+                          args.telemetry_tol)
     eps = new.get("batched_events_per_sec", 0.0)
+    tel = new.get("telemetry") or {}
+    tel_desc = (f"{tel.get('overhead_ratio', 0.0) * 100:+.1f}%"
+                if tel.get("enabled") else "off")
     print(f"perf gate: events/sec={eps:.0f} "
           f"(baseline {base.get('batched_events_per_sec', 0.0):.0f}), "
           f"decisions_match={new.get('decisions_match')}, "
           f"sharded={new.get('sharded_decisions_match')}, "
-          f"chunked={new.get('chunked_decisions_match')}")
+          f"chunked={new.get('chunked_decisions_match')}, "
+          f"telemetry={tel_desc}")
     for s in skips:
         print(f"perf gate: {s}")
     for e in errors:

@@ -94,6 +94,8 @@ from ..sim.metrics import SimResult
 from .mig import A100_40GB, DeviceModel, PROFILE_INDEX
 from . import policy_core as pc
 from . import compile_cache
+from ..obs import inscan as obs_inscan
+from ..obs import reasons as obs_reasons
 
 # Policy ids re-exported for callers of this module.  The old engine's
 # "GRMU-DB" policy id is gone: the DB point is GRMU with defrag=False,
@@ -383,6 +385,10 @@ class ReplayStatics:
     # Sharded-fleet replay (repro.core.sharded): shard_map axis + count.
     axis_name: Optional[str] = None
     num_shards: int = 0
+    # In-scan telemetry (repro.obs.inscan).  Off by default: the default
+    # jaxpr — and thus the lint jaxpr-gate fingerprints — is unchanged.
+    # On/off are distinct statics, so each keys its own compiled replay.
+    telemetry: bool = False
 
 
 def replay_statics(events: EventTrace, policy: int, *,
@@ -392,7 +398,8 @@ def replay_statics(events: EventTrace, policy: int, *,
                    mecc_window: float = 24.0,
                    score_backend: str = "auto",
                    axis_name: Optional[str] = None,
-                   num_shards: int = 0) -> ReplayStatics:
+                   num_shards: int = 0,
+                   telemetry: bool = False) -> ReplayStatics:
     """Resolve user cfg (including ``score_backend="auto"``) against the
     trace's shapes/fleet into a hashable :class:`ReplayStatics`."""
     from ..kernels.policy_score import LANES
@@ -419,7 +426,7 @@ def replay_statics(events: EventTrace, policy: int, *,
         consolidation_interval=consolidation_interval,
         defrag_trigger=defrag_trigger, mecc_window=mecc_window,
         score_backend=score_backend, axis_name=axis_name,
-        num_shards=num_shards)
+        num_shards=num_shards, telemetry=telemetry)
 
 
 def _gpu_full(events: EventTrace) -> np.ndarray:
@@ -487,10 +494,19 @@ def init_state(events: EventTrace, st: ReplayStatics) -> Dict[str, jax.Array]:
     S = events.hourly_slots or len(events.step_times)
     NP, M = T.num_profiles, T.num_models
 
+    # Telemetry never widens or adds a buffer the inner lax.scan carries
+    # through the event switch — such a buffer costs pass-through copies
+    # in every branch, per event (see repro.obs.inscan).  vmrow gains a
+    # reason-code column (-1 = arrival not yet processed) written by the
+    # same row scatter the arrival branch always does; the per-step
+    # snapshots leave the scan as ys and are folded into the
+    # ``tele_steps``/``tele_masks`` accumulators, which only ever cross
+    # the *outer* jit (or chunk-step) boundary.
+    vm0 = [-1, 0, 0, -1] if st.telemetry else [-1, 0, 0]
     state0 = dict(
         free=jnp.asarray(_gpu_full(events), jnp.int32),
-        # Per-VM row: [gpu, start, accepted].
-        vmrow=jnp.tile(jnp.asarray([-1, 0, 0], jnp.int32), (N, 1)),
+        # Per-VM row: [gpu, start, accepted] (+ telemetry reason code).
+        vmrow=jnp.tile(jnp.asarray(vm0, jnp.int32), (N, 1)),
         # Per-reference-profile row: [accepted, total].
         counts=jnp.zeros((NP, 2), jnp.int32),
         # Per-host row: [cpu_used, ram_used].
@@ -498,6 +514,10 @@ def init_state(events: EventTrace, st: ReplayStatics) -> Dict[str, jax.Array]:
         # Per-step row: [accepted_cum, total_cum, pms, gpus].
         hourly=jnp.zeros((S, 4), jnp.int32),
     )
+    if st.telemetry:
+        state0["tele_steps"] = jnp.zeros(
+            (S, obs_inscan.NUM_STEP_COLS), jnp.int32)
+        state0["tele_masks"] = jnp.zeros((S, G), obs_inscan.MASK_DTYPE)
     need_defrag = st.policy == GRMU and st.defrag
     need_consolidation = (st.policy == GRMU
                           and st.consolidation_interval is not None)
@@ -558,7 +578,11 @@ def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
                tr: Dict[str, jax.Array], heavy_capacity
                ) -> Dict[str, jax.Array]:
     """Scan the event stream in ``tr`` through the replay step and return
-    the **final carry** (the whole cluster state).
+    the **final carry** (the whole cluster state).  With telemetry
+    statics, returns ``(final carry, stacked per-event telemetry ys)``
+    instead — ``state0`` must then *not* contain the ``tele_steps`` /
+    ``tele_masks`` accumulators (callers pop them and fold the ys into
+    them post-scan).
 
     This is the chunk-streaming unit: because the carry is the complete
     state and the step function never looks at an event's position, a
@@ -631,6 +655,10 @@ def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
         need = _vmres[vi]                               # (2,) cpu, ram
         host_ok = jnp.all(state["host_used"][_ghost] + need <= _cap_g,
                           axis=1)
+        # Telemetry reads decision-time state: the free masks before any
+        # placement and the GRMU flags before any basket growth.
+        tele_free = state["free"] if st.telemetry else None
+        tele_grew = tele_quota = None
         if st.policy == GRMU:
             heavy = _vmheavy[vi]
             if st.num_shards:
@@ -643,6 +671,10 @@ def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
                     jnp, T, _gmid, state["free"], pids, heavy, host_ok,
                     state["basket"], heavy_cap, light_cap)
             want = jnp.where(heavy, pc.HEAVY_BASKET, pc.LIGHT_BASKET)
+            if st.telemetry:
+                tele_grew = grew
+                tele_quota = ((state["basket"] == want).sum()
+                              >= jnp.where(heavy, heavy_cap, light_cap))
             basket = jnp.where(
                 grew, state["basket"].at[grow_idx].set(want),
                 state["basket"])
@@ -662,10 +694,18 @@ def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
         g = jnp.maximum(pick, 0)
         mask = state["free"][g]
         p_g = pids[_gmid[g]]      # profile under the chosen GPU's model
-        row = jnp.stack([jnp.where(ok, pick, -1),
-                         jnp.where(ok, T.assign_start[_gmid[g], mask,
-                                                      p_g], 0),
-                         okc])
+        row = [jnp.where(ok, pick, -1),
+               jnp.where(ok, T.assign_start[_gmid[g], mask, p_g], 0),
+               okc]
+        if st.telemetry:
+            # Telemetry column of the SAME vmrow write — never a
+            # separate buffer (see repro.obs.inscan on why).
+            false = jnp.asarray(False)
+            row.append(obs_inscan.arrival_reason_code(
+                T, _gmid, tele_free, pids, host_ok, ok,
+                false if tele_grew is None else tele_grew,
+                false if tele_quota is None else tele_quota))
+        row = jnp.stack(row)
         state = dict(
             state,
             free=state["free"].at[g].set(
@@ -812,8 +852,13 @@ def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
                             state["counts"][:, 1].sum(),
                             pms.sum().astype(jnp.int32),
                             gpu_active.sum()])
-        return dict(state,
-                    hourly=state["hourly"].at[e["idx"]].set(sample))
+        state = dict(state,
+                     hourly=state["hourly"].at[e["idx"]].set(sample))
+        if st.telemetry:
+            # The telemetry sample leaves as this step's scan output —
+            # never through the carry (see repro.obs.inscan on why).
+            return state, obs_inscan.step_row(state)
+        return state
 
     # -- padding -----------------------------------------------------------
     def pad_noop(state, e):
@@ -824,34 +869,74 @@ def _scan_body(st: ReplayStatics, state0: Dict[str, jax.Array],
         # computes in int32 exactly as the legacy layout did.
         e = dict(e, kind=e["kind"].astype(jnp.int32),
                  profile=e["profile"].astype(jnp.int32))
+        if st.telemetry:
+            # Every branch emits a telemetry row (zeros outside
+            # step-end) as the scan's per-event output; scan machinery
+            # writes it once into the stacked ys — no branch ever
+            # copies it through a carry.
+            zrow = (jnp.zeros((obs_inscan.NUM_STEP_COLS,), jnp.int32),
+                    jnp.zeros((G,), obs_inscan.MASK_DTYPE))
+            return jax.lax.switch(
+                e["kind"],
+                [lambda s, ee: (departure(s, ee), zrow),
+                 lambda s, ee: (arrival(s, ee), zrow),
+                 step_end,
+                 lambda s, ee: (pad_noop(s, ee), zrow)],
+                state, e)
         state = jax.lax.switch(
             e["kind"],
             [departure, arrival, step_end, pad_noop],
             state, e)
         return state, None
 
-    final, _ = jax.lax.scan(step, state0, ev)
-    return final
+    # Telemetry scans unroll the loop body: the per-iteration cost of
+    # emitting the ys row (output-buffer bookkeeping per event) is
+    # fixed-size, so amortizing it over 8 events cuts most of the
+    # telemetry overhead.  The default path keeps unroll=1 — its jaxpr
+    # (and the lint fingerprint gate over it) is byte-identical.
+    final, ys = jax.lax.scan(step, state0, ev,
+                             unroll=8 if st.telemetry else 1)
+    return (final, ys) if st.telemetry else final
 
 
-def _finalize(final: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """Reduce a final scan carry to the replay's small output arrays."""
+def _finalize(st: ReplayStatics, final: Dict[str, jax.Array]
+              ) -> Dict[str, jax.Array]:
+    """Reduce a final scan carry to the replay's small output arrays.
+    When the statics enabled telemetry, ``final`` also holds the folded
+    ``tele_steps``/``tele_masks`` series and vmrow's code column; all
+    are split into the ``tele_*`` output series."""
     zero = jnp.asarray(0, jnp.int32)
-    return dict(
+    out = dict(
         accepted=final["counts"][:, 0], total=final["counts"][:, 1],
         vm_accepted=final["vmrow"][:, 2] > 0,
         h_acc=final["hourly"][:, 0], h_tot=final["hourly"][:, 1],
         h_pms=final["hourly"][:, 2], h_gpus=final["hourly"][:, 3],
         intra=final.get("intra", zero), inter=final.get("inter", zero),
     )
+    if st.telemetry:
+        out.update(obs_inscan.unpack_finalize(final))
+    return out
 
 
 def _scan_fn(st: ReplayStatics, state0: Dict[str, jax.Array],
              tr: Dict[str, jax.Array], heavy_capacity
              ) -> Dict[str, jax.Array]:
     """The whole replay as a pure function of (state0, trace, cap) —
-    :func:`_scan_body` followed by the output reductions."""
-    return _finalize(_scan_body(st, state0, tr, heavy_capacity))
+    :func:`_scan_body` followed by the output reductions.  With
+    telemetry statics the per-event ys are folded into the
+    ``tele_steps``/``tele_masks`` accumulators (one scatter per replay)
+    before finalize."""
+    if st.telemetry:
+        state0 = dict(state0)
+        steps0 = state0.pop("tele_steps")
+        masks0 = state0.pop("tele_masks")
+        final, ys = _scan_body(st, state0, tr, heavy_capacity)
+        is_step = tr["kind"].astype(jnp.int32) == STEP_END
+        steps, masks = obs_inscan.fold_step_rows(
+            (steps0, masks0), is_step, tr["idx"], ys)
+        final = dict(final, tele_steps=steps, tele_masks=masks)
+        return _finalize(st, final)
+    return _finalize(st, _scan_body(st, state0, tr, heavy_capacity))
 
 
 def _jitted_run(st: ReplayStatics) -> Callable:
@@ -935,6 +1020,11 @@ def result_from_arrays(events: EventTrace, policy: int, out: dict
     res.migrations = res.intra_migrations + res.inter_migrations
     acc_mask = np.asarray(out["vm_accepted"], bool)[:len(events.vm_ids)]
     res.accepted_ids = [int(v) for v in events.vm_ids[acc_mask]]
+    if "tele_rej" in out:       # telemetry-enabled replay: reason tally
+        rej = np.asarray(out["tele_rej"])
+        res.rejection_reasons = {
+            obs_reasons.REASON_NAMES[c]: int(rej[c])
+            for c in range(1, obs_reasons.NUM_CODES)}
     return res
 
 

@@ -18,12 +18,14 @@ before device initialization.
 from __future__ import annotations
 
 import os
-from typing import Any, Callable, Dict
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 
-_RUN_CACHE: Dict[Any, Callable] = {}
-_STATS = {"hits": 0, "misses": 0}
+_RUN_CACHE: "OrderedDict[Any, Callable]" = OrderedDict()
+_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_MAX_ENTRIES: Optional[int] = None
 _PERSISTENT_DIR: str = ""
 
 
@@ -32,24 +34,47 @@ def cached_replay_fn(key: Any, build: Callable[[], Callable]) -> Callable:
     hashable — a :class:`repro.core.batched.ReplayStatics`, or a
     ``(statics, variant, ...)`` tuple such as the sharded engine's
     ``(st, K)`` and the streaming engine's ``(st, "chunk", chunk)`` /
-    ``(st, "finalize")`` keys), building it on miss."""
+    ``(st, "finalize")`` keys), building it on miss.
+
+    When a bound is set with :func:`set_max_entries` the cache evicts
+    least-recently-used wrappers (a hit refreshes recency); unbounded by
+    default, which matches the historical behavior."""
     fn = _RUN_CACHE.get(key)
     if fn is None:
         _STATS["misses"] += 1
         fn = _RUN_CACHE[key] = build()
+        if _MAX_ENTRIES is not None:
+            while len(_RUN_CACHE) > _MAX_ENTRIES:
+                _RUN_CACHE.popitem(last=False)
+                _STATS["evictions"] += 1
     else:
         _STATS["hits"] += 1
+        _RUN_CACHE.move_to_end(key)
     return fn
 
 
+def set_max_entries(n: Optional[int]) -> Optional[int]:
+    """Bound the wrapper cache to ``n`` LRU entries (None = unbounded,
+    the default).  Evicts immediately if already over.  Returns the
+    previous bound so callers can restore it (try/finally)."""
+    global _MAX_ENTRIES
+    prev, _MAX_ENTRIES = _MAX_ENTRIES, n
+    if n is not None:
+        while len(_RUN_CACHE) > n:
+            _RUN_CACHE.popitem(last=False)
+            _STATS["evictions"] += 1
+    return prev
+
+
 def cache_stats() -> Dict[str, int]:
-    """Hit/miss counters plus the number of live cached replay fns."""
+    """Hit/miss/eviction counters plus the number of live cached replay
+    fns (the flight recorder snapshots this into its JSONL stream)."""
     return dict(_STATS, entries=len(_RUN_CACHE))
 
 
 def clear_cache() -> None:
     _RUN_CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    _STATS["hits"] = _STATS["misses"] = _STATS["evictions"] = 0
 
 
 def ensure_persistent_cache(path: str | None = None) -> str:
@@ -75,4 +100,4 @@ def ensure_persistent_cache(path: str | None = None) -> str:
 
 
 __all__ = ["cached_replay_fn", "cache_stats", "clear_cache",
-           "ensure_persistent_cache"]
+           "set_max_entries", "ensure_persistent_cache"]

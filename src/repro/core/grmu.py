@@ -114,9 +114,15 @@ class GRMU(PlacementPolicy):
     def place(self, vm: VM) -> bool:
         heavy = self._is_heavy(vm)
         basket = self.heavy if heavy else self.light
+        free = self.cluster.free_masks
+        host_ok = self.cluster.host_fits_vec(vm)
+        # Pre-growth quota state: the same flag the batched telemetry
+        # captures before its basket rebind (repro.obs.reasons cascade).
+        quota_full = (len(basket) >=
+                      (self.heavy_capacity if heavy else self.light_capacity))
         pick, grew, _ = pc.grmu_select(
-            np, self._T, self._mid, self.cluster.free_masks,
-            self._pids(vm), heavy, self.cluster.host_fits_vec(vm),
+            np, self._T, self._mid, free,
+            self._pids(vm), heavy, host_ok,
             self._basket_array(), self.heavy_capacity, self.light_capacity)
         if grew:
             # The grown GPU is the lowest-index pool member == pool.get();
@@ -124,8 +130,22 @@ class GRMU(PlacementPolicy):
             # placement (the GPU stays in the basket, empty).
             basket.add(self.pool.get())
         if pick < 0:
+            from ..obs import reasons as obs_reasons
+            # free/host_ok predate the (possible) growth above; growth
+            # never edits free masks, so slot feasibility is still the
+            # decision-time view.
+            slot = self._T.fits[self._mid, free, self._pids(vm)[self._mid]]
+            self._last_reason = int(obs_reasons.arrival_code(
+                np, False, slot.any(), (slot & host_ok).any(),
+                bool(grew), quota_full))
             return False
         return self._place_on(vm, int(pick))
+
+    def rejection_reason(self, vm: VM) -> int:
+        """The code snapshotted by the failed ``place`` just above —
+        growth mutates the baskets, so lazy classification would misread
+        ``quota_full``."""
+        return self._last_reason
 
     # -- Alg. 4: defragmentation (intra-GPU migration) ------------------------
     def defragment(self) -> int:

@@ -73,6 +73,20 @@ class PlacementPolicy:
             return False
         return self._place_on(vm, int(pick))
 
+    def rejection_reason(self, vm: VM) -> int:
+        """Reason code (``repro.obs.reasons``) for an arrival ``place``
+        just returned False on.  A failed baseline place mutates nothing,
+        so classifying lazily from current state sees exactly the
+        decision-time cluster — the same flags the batched scan's
+        telemetry captures.  GRMU overrides this (growth mutates the
+        baskets, so it snapshots its flags inside ``place``)."""
+        from ..obs import reasons as obs_reasons  # deferred: no cycle
+        free = self.cluster.free_masks
+        slot = self._T.fits[self._mid, free, self._pids(vm)[self._mid]]
+        host_ok = self.cluster.host_fits_vec(vm)
+        return int(obs_reasons.arrival_code(
+            np, False, slot.any(), (slot & host_ok).any(), False, False))
+
     def on_arrival_observed(self, vm: VM, now: float) -> None:
         """Called for every arrival (accepted or not) — MECC history."""
 

@@ -28,6 +28,14 @@ the per-chunk scan body in the same fleet-partition shard_map
 (``make_chunked_replay(..., num_shards=K)``), so a sharded fleet can
 also stream its event chunks with only O(chunk) trace bytes resident.
 
+In-scan telemetry (``repro.obs.inscan``, ``telemetry=True`` statics)
+needs **no** cross-shard reconcile of its own: every telemetry
+accumulator is computed from replicated operands (the post-reconcile
+cluster state, the replicated ``T`` tables and growth flags), so all K
+shards hold bit-identical telemetry arrays and the replicated-out
+``P()`` spec returns any one of them unchanged — merging is the
+identity, preserving the O(K) reconcile budget.
+
 Run with virtual host devices for CPU testing/benchmarks:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set *before*
 importing jax — ``benchmarks/run.py --perf-env`` or

@@ -42,11 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import inscan as obs_inscan
+from ..obs import recorder as obs_recorder
 from ..sim.metrics import SimResult
 from . import compile_cache
-from .batched import (EVENT_KEYS, EventTrace, _finalize, _scan_body,
-                      default_heavy_capacity, init_state, replay_statics,
-                      result_from_arrays, trace_arrays)
+from .batched import (EVENT_KEYS, STEP_END, EventTrace, _finalize,
+                      _scan_body, default_heavy_capacity, init_state,
+                      replay_statics, result_from_arrays, trace_arrays)
 from .bucketing import pad_events
 
 # Default chunk length: big enough that per-chunk dispatch overhead is
@@ -79,7 +81,21 @@ def replay_bytes(events: EventTrace,
 
 
 def _chunk_fn(st, state, ev_chunk, rest, heavy_capacity):
-    """One chunk through the scan body: carry in, carry out."""
+    """One chunk through the scan body: carry in, carry out.  With
+    telemetry statics the ``tele_steps``/``tele_masks`` accumulators
+    ride the chunk-level carry (this jit's boundary, crossed once per
+    chunk) — never the inner ``lax.scan`` carry — and each chunk's
+    stacked telemetry ys are folded into them with one scatter here."""
+    if st.telemetry:
+        state = dict(state)
+        steps0 = state.pop("tele_steps")
+        masks0 = state.pop("tele_masks")
+        final, ys = _scan_body(st, state, dict(rest, **ev_chunk),
+                               heavy_capacity)
+        is_step = ev_chunk["kind"].astype(jnp.int32) == STEP_END
+        steps, masks = obs_inscan.fold_step_rows(
+            (steps0, masks0), is_step, ev_chunk["idx"], ys)
+        return dict(final, tele_steps=steps, tele_masks=masks)
     return _scan_body(st, state, dict(rest, **ev_chunk), heavy_capacity)
 
 
@@ -128,7 +144,8 @@ def make_chunked_replay(events: EventTrace, policy: int, *,
     # Finalize donates too: the carry is dead once reduced to outputs.
     ffn = compile_cache.cached_replay_fn(
         (st, "finalize"),
-        lambda: jax.jit(_finalize, donate_argnums=(0,)))
+        lambda: jax.jit(functools.partial(_finalize, st),
+                        donate_argnums=(0,)))
 
     ev_np, rest_np = split_trace(trace_arrays(events))
     E = len(events.kind)
@@ -138,9 +155,15 @@ def make_chunked_replay(events: EventTrace, policy: int, *,
                for k, v in ev_np.items()} for i in range(n_chunks)]
     rest = {k: jnp.asarray(v) for k, v in rest_np.items()}
 
+    chunk_bytes = sum(int(v[:chunk_events].nbytes)
+                      for v in ev_np.values())
+
     def run(heavy_capacity):
         cap = jnp.asarray(heavy_capacity, jnp.int32)
         state = init_state(events, st)
+        rec = obs_recorder.active()
+        if rec is not None:
+            return _run_recorded(rec, state, cap)
         # Double buffering: stage chunk i+1 while chunk i scans.
         nxt = jax.device_put(chunks[0])
         for i in range(n_chunks):
@@ -148,6 +171,27 @@ def make_chunked_replay(events: EventTrace, policy: int, *,
                              if i + 1 < n_chunks else None)
             state = jfn(state, cur, rest, cap)
         return ffn(state)
+
+    def _run_recorded(rec, state, cap):
+        """Same loop with per-chunk flight-recorder spans.  A separate
+        body so the default path stays branch-free per chunk; spans
+        measure host dispatch time (see ``repro.obs.recorder``)."""
+        with rec.span("chunk.prefetch", index=0, nbytes=chunk_bytes):
+            nxt = jax.device_put(chunks[0])
+        for i in range(n_chunks):
+            cur = nxt
+            if i + 1 < n_chunks:
+                with rec.span("chunk.prefetch", index=i + 1,
+                              nbytes=chunk_bytes):
+                    nxt = jax.device_put(chunks[i + 1])
+            else:
+                nxt = None
+            with rec.span("chunk.step", index=i, nbytes=chunk_bytes):
+                state = jfn(state, cur, rest, cap)
+        with rec.span("finalize"):
+            out = ffn(state)
+        rec.cache_stats()
+        return out
 
     run.num_chunks = n_chunks
     run.chunk_events = chunk_events

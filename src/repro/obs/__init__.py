@@ -1,0 +1,28 @@
+"""Flight recorder: replay observability in two planes.
+
+``repro.obs.inscan``   — in-scan telemetry: pure-array accumulators
+                         threaded through the batched/chunked/sharded
+                         replay carry (rejection reasons, fragmentation
+                         and utilization time-series, basket occupancy).
+                         Off by default; decision-neutral when on.
+``repro.obs.reasons``  — the rejection-reason taxonomy shared with the
+                         sequential engine for cross-engine parity.
+``repro.obs.recorder`` — host plane: profiler-annotated spans, compile
+                         cache stats, schema-versioned JSONL export.
+``repro.obs.report``   — ``python -m repro.obs.report``: text/JSON
+                         dashboards from one or more JSONL files.
+
+This package is the only place host callbacks / debug prints are
+permitted near the engines; everywhere else the ``callback-purity``
+lint rule keeps the scan hot path pure (tools/lint/ast_rules.py).
+"""
+from . import reasons
+from .inscan import (SCHEMA_VERSION, TELE_KEYS, ReplayTelemetry,
+                     replay_with_telemetry, telemetry_from_arrays)
+from .reasons import REASON_NAMES, REJECTION_REASONS, empty_reason_tally
+from .recorder import Recorder, active, record
+
+__all__ = ["reasons", "SCHEMA_VERSION", "TELE_KEYS", "ReplayTelemetry",
+           "replay_with_telemetry", "telemetry_from_arrays",
+           "REASON_NAMES", "REJECTION_REASONS", "empty_reason_tally",
+           "Recorder", "active", "record"]

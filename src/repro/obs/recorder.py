@@ -1,0 +1,128 @@
+"""Host observability plane: spans, cache stats, schema-versioned JSONL.
+
+The :class:`Recorder` is the flight recorder's host half.  It never runs
+inside jit — engines check :func:`active` (None when recording is off,
+the default) and only then emit spans, so the hot path stays a no-op
+unless a recorder is installed with :func:`record`:
+
+    from repro.obs import recorder as obs_recorder
+    with obs_recorder.record("run.jsonl", meta={"policy": "GRMU"}) as rec:
+        res = replay_chunked(events, GRMU)      # emits chunk.* spans
+        rec.result(res)
+        rec.cache_stats()
+
+Every line in the JSONL file is one record with ``schema`` (the
+``SCHEMA_VERSION`` of ``repro.obs.inscan``), ``kind`` and ``run_id``:
+
+  ``meta``       run header (wall time, caller-provided metadata)
+  ``span``       a named wall-clock span (``name``, ``dur_s``, extras
+                 such as ``index``/``nbytes`` for chunk steps) — also
+                 wrapped in ``jax.profiler.TraceAnnotation`` so spans
+                 line up with XLA events in a profiler trace
+  ``cache``      compile-cache hits/misses/evictions/entries snapshot
+  ``result``     a SimResult summary + rejection-reason tally
+  ``telemetry``  a full ``ReplayTelemetry`` payload (in-scan plane)
+
+Spans measure *dispatch* wall-clock: jax executes asynchronously, so a
+chunk-step span is the host-side cost of submitting (and, under donation
+back-pressure, partially waiting on) that chunk — end-to-end device time
+comes from the profiler trace.  ``REPRO_TRACE=1`` additionally captures
+a ``jax.profiler.start_trace`` session next to the JSONL file (or at
+``REPRO_TRACE_DIR``) for TensorBoard/Perfetto.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from typing import Iterator, Optional
+
+import jax
+
+from .inscan import SCHEMA_VERSION
+
+_ACTIVE: Optional["Recorder"] = None
+
+
+def active() -> Optional["Recorder"]:
+    """The process-active recorder, or None (recording off — default)."""
+    return _ACTIVE
+
+
+class Recorder:
+    """Appends schema-versioned JSONL records; see the module docstring.
+    Prefer the :func:`record` context manager, which also installs the
+    recorder as the process-active one so engine loops emit spans."""
+
+    def __init__(self, path, *, run_id: Optional[str] = None,
+                 meta: Optional[dict] = None):
+        self.path = str(path)
+        self.run_id = run_id or f"run-{os.getpid()}-{int(time.time())}"
+        self._fh = open(self.path, "a")
+        self._tracing = False
+        self.emit("meta", time_unix=time.time(), **(meta or {}))
+        if os.environ.get("REPRO_TRACE") == "1":
+            trace_dir = os.environ.get(
+                "REPRO_TRACE_DIR",
+                os.path.join(os.path.dirname(self.path) or ".",
+                             "jax_trace"))
+            jax.profiler.start_trace(trace_dir)
+            self._tracing = True
+            self.emit("trace_started", trace_dir=trace_dir)
+
+    def emit(self, kind: str, **fields) -> None:
+        rec = {"schema": SCHEMA_VERSION, "kind": kind,
+               "run_id": self.run_id}
+        rec.update(fields)
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+
+    @contextlib.contextmanager
+    def span(self, name: str, **fields) -> Iterator[None]:
+        """Time a host-side region; doubles as a profiler annotation so
+        the span is visible in a ``REPRO_TRACE=1`` capture."""
+        t0 = time.perf_counter()
+        with jax.profiler.TraceAnnotation(name):
+            yield
+        self.emit("span", name=name,
+                  dur_s=time.perf_counter() - t0, **fields)
+
+    def cache_stats(self) -> None:
+        """Snapshot the replay compile cache (hits/misses/evictions)."""
+        from ..core import compile_cache
+        self.emit("cache", **compile_cache.cache_stats())
+
+    def result(self, res) -> None:
+        """Record a ``SimResult``'s summary + rejection-reason tally."""
+        self.emit("result", summary=res.summary(),
+                  rejection_reasons=dict(res.rejection_reasons))
+
+    def telemetry(self, tele) -> None:
+        """Record a full in-scan ``ReplayTelemetry`` payload."""
+        self.emit("telemetry", **tele.to_json_dict())
+
+    def close(self) -> None:
+        if self._tracing:
+            jax.profiler.stop_trace()
+            self._tracing = False
+        if not self._fh.closed:
+            self._fh.close()
+
+
+@contextlib.contextmanager
+def record(path, *, run_id: Optional[str] = None,
+           meta: Optional[dict] = None) -> Iterator[Recorder]:
+    """Open a :class:`Recorder` on ``path`` and install it as the
+    process-active recorder for the duration of the block."""
+    global _ACTIVE
+    rec = Recorder(path, run_id=run_id, meta=meta)
+    prev, _ACTIVE = _ACTIVE, rec
+    try:
+        yield rec
+    finally:
+        _ACTIVE = prev
+        rec.close()
+
+
+__all__ = ["Recorder", "record", "active"]

@@ -11,6 +11,7 @@ import heapq
 from typing import Callable, List, Optional
 
 from ..core.policies import PlacementPolicy
+from ..obs import reasons as obs_reasons
 from .cluster import Cluster, VM
 from .metrics import SimResult
 
@@ -22,6 +23,7 @@ def simulate(cluster: Cluster, policy: PlacementPolicy, vms: List[VM],
     # Per-profile tallies are keyed by the fleet's *reference* model
     # (cluster.models[0]) — the model VM.profile is expressed in.
     res = SimResult.for_model(policy.name, cluster.models[0])
+    res.rejection_reasons = obs_reasons.empty_reason_tally()
     arrivals = sorted(vms, key=lambda v: (v.arrival, v.vm_id))
     if horizon is None:
         horizon = max((v.arrival for v in arrivals), default=0.0) + step_hours
@@ -51,6 +53,8 @@ def simulate(cluster: Cluster, policy: PlacementPolicy, vms: List[VM],
                 heapq.heappush(departures, (vm.departure, vm.vm_id))
             else:
                 res.rejected += 1
+                code = policy.rejection_reason(vm)
+                res.rejection_reasons[obs_reasons.REASON_NAMES[code]] += 1
                 rejected_this_step.append(vm)
         # 3) policy end-of-step hook (defrag / consolidation)
         policy.on_step_end(t, rejected_this_step)

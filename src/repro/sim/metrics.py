@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import TYPE_CHECKING, Dict, List
 
 import numpy as np
@@ -11,6 +12,10 @@ if TYPE_CHECKING:  # pragma: no cover
 
 # numpy renamed trapz -> trapezoid in 2.0 (trapz is removed in 2.x).
 _trapezoid = getattr(np, "trapezoid", None) or np.trapz
+
+# Serialized-SimResult schema.  Bump on any field add/rename/remove;
+# ``from_dict`` refuses mismatched versions instead of misreading them.
+SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -38,6 +43,12 @@ class SimResult:
     # Per-VM decisions: vm_ids accepted, in arrival order (both engines
     # fill this; the cross-engine equivalence tests compare it).
     accepted_ids: List[int] = dataclasses.field(default_factory=list)
+    # Rejections by reason name (repro.obs.reasons).  The sequential
+    # engine always fills this; the batched engine fills it when replayed
+    # with telemetry=True — empty otherwise, so equivalence tests that
+    # predate the taxonomy keep comparing only the fields above.
+    rejection_reasons: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @classmethod
     def for_model(cls, policy: str, model: "DeviceModel",
@@ -98,5 +109,29 @@ class SimResult:
             "migration_fraction": round(self.migration_fraction, 4),
         }
 
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Schema-versioned plain-dict form (JSON-safe: every field is
+        already int/float/str containers)."""
+        return {"schema_version": SCHEMA_VERSION,
+                **dataclasses.asdict(self)}
 
-__all__ = ["SimResult"]
+    def to_json(self, **json_kw) -> str:
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SimResult":
+        d = dict(d)
+        ver = d.pop("schema_version", None)
+        if ver != SCHEMA_VERSION:
+            raise ValueError(
+                f"SimResult schema_version {ver!r} != supported "
+                f"{SCHEMA_VERSION}; refusing to misread")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SimResult":
+        return cls.from_dict(json.loads(s))
+
+
+__all__ = ["SimResult", "SCHEMA_VERSION"]

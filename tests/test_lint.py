@@ -10,9 +10,11 @@ import pytest
 
 from tools.lint import ratchet as R
 from tools.lint.ast_rules import (check_backend_purity,
+                                  check_callback_purity,
                                   check_donation_safety,
                                   check_dtype_discipline,
-                                  check_recompile_hazard, run_rules)
+                                  check_recompile_hazard,
+                                  in_callback_scope, run_rules)
 from tools.lint.common import SourceFile, iter_source_files
 
 REPO = Path(__file__).resolve().parents[1]
@@ -235,6 +237,59 @@ def test_donation_resolves_named_builders():
 
 
 # ---------------------------------------------------------------------------
+# callback-purity
+# ---------------------------------------------------------------------------
+
+def test_callback_purity_flags_host_callbacks_in_scan_body():
+    bad = sf("""
+        import jax
+        from jax import debug
+        from jax.experimental import io_callback
+        def arrival(state, e):
+            jax.debug.print("placing vm {v}", v=e["vm"])
+            debug.callback(lambda c: None, state["free"])
+            io_callback(lambda x: x, state["free"], state["free"])
+            return state
+    """, rel="src/repro/core/batched.py")
+    v = check_callback_purity([bad])
+    codes = {x.code for x in v}
+    assert codes == {"jax.debug.print", "debug.callback", "io_callback"}
+    assert all(x.rule == "callback-purity" and x.scope == "arrival"
+               for x in v)
+
+
+def test_callback_purity_clean_twin_pure_carry_accumulators():
+    good = sf("""
+        import jax.numpy as jnp
+        def arrival(state, e, code):
+            # telemetry as pure carry updates — the sanctioned pattern
+            return dict(state,
+                        tele_rej=state["tele_rej"].at[code].add(1))
+        def host_report(res):
+            print(res)       # plain print outside jit is not a callback
+    """, rel="src/repro/core/batched.py")
+    assert check_callback_purity([good]) == []
+
+
+def test_callback_purity_scope_exempts_obs_package():
+    assert in_callback_scope("src/repro/core/batched.py")
+    assert in_callback_scope("src/repro/core/streaming.py")
+    assert not in_callback_scope("src/repro/obs/recorder.py")
+    assert not in_callback_scope("src/repro/sim/engine.py")  # not engine
+    # The registry filter applies it: an obs-pathed file is not selected.
+    bad_src = """
+        import jax
+        def f(x):
+            jax.debug.print("{x}", x=x)
+    """
+    flagged = run_rules([sf(bad_src, rel="src/repro/core/batched.py")],
+                        rules=["callback-purity"])
+    exempt = run_rules([sf(bad_src, rel="src/repro/obs/recorder.py")],
+                       rules=["callback-purity"])
+    assert len(flagged) == 1 and exempt == []
+
+
+# ---------------------------------------------------------------------------
 # ratchet semantics
 # ---------------------------------------------------------------------------
 
@@ -284,7 +339,8 @@ def test_ratchet_roundtrip(tmp_path):
 
 def test_repo_ast_rules_clean_after_ratchet():
     files = iter_source_files(REPO, ("src/repro/core",
-                                     "src/repro/kernels"))
+                                     "src/repro/kernels",
+                                     "src/repro/obs"))
     violations = run_rules(files)
     entries = R.load_ratchet(REPO / "tools" / "lint" / "ratchet.json")
     errors, _ = R.compare(violations, entries)
@@ -292,7 +348,8 @@ def test_repo_ast_rules_clean_after_ratchet():
 
 
 def test_backend_purity_zero_in_policy_core():
-    files = iter_source_files(REPO, ("src/repro/core/policy_core.py",))
+    files = iter_source_files(REPO, ("src/repro/core/policy_core.py",
+                                     "src/repro/obs/reasons.py"))
     assert run_rules(files, rules=["backend-purity"]) == []
 
 

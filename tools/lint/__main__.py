@@ -31,8 +31,10 @@ if "xla_force_host_platform_device_count" not in \
 
 REPO_ROOT = Path(__file__).resolve().parents[2]
 
-# Directories the AST layer scans (rules filter further by path).
-SCAN_DIRS = ("src/repro/core", "src/repro/kernels")
+# Directories the AST layer scans (rules filter further by path —
+# repro.obs is scanned for backend-purity of the shared reason cascade
+# but exempt from callback-purity, being the flight recorder itself).
+SCAN_DIRS = ("src/repro/core", "src/repro/kernels", "src/repro/obs")
 
 
 def main(argv=None) -> int:

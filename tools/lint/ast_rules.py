@@ -1,6 +1,6 @@
 """Layer 1 of repro-lint: AST rules over the engine sources.
 
-Four rules, each enforcing one of the engine's decision-invariance
+Five rules, each enforcing one of the engine's decision-invariance
 contracts (docs/ARCHITECTURE.md "Invariants & static analysis"):
 
 ``backend-purity``
@@ -37,6 +37,17 @@ contracts (docs/ARCHITECTURE.md "Invariants & static analysis"):
     direct ``jax.jit(..., donate_argnums=...)`` assignments and through
     ``cached_replay_fn(key, build)`` builders (named or lambda).
 
+``callback-purity``
+    Host callbacks (``io_callback`` / ``pure_callback`` /
+    ``jax.debug.print`` / ``jax.debug.callback`` /
+    ``host_callback.call``) anywhere in the engine dirs: every engine
+    function can be inlined into the replay scan body, where a host
+    callback de-jits the hot path and perturbs chunk/shard scheduling.
+    Observability lives in ``repro.obs`` — the in-scan plane is pure
+    array accumulators in the carry; host-side spans wrap engine *entry
+    points* from outside.  ``src/repro/obs`` is therefore the one
+    sanctioned exemption.
+
 Every rule is a pure function ``(files) -> [Violation]`` over parsed
 :class:`~tools.lint.common.SourceFile` objects, so tests can run them on
 fixture snippets verbatim.
@@ -51,7 +62,8 @@ from .common import (SourceFile, Violation, ancestors, attach_parents,
                      scope_of)
 
 # Modules whose array code must stay parameterized over ``xp``.
-BACKEND_AGNOSTIC_MODULES = ("src/repro/core/policy_core.py",)
+BACKEND_AGNOSTIC_MODULES = ("src/repro/core/policy_core.py",
+                            "src/repro/obs/reasons.py")
 
 # Engine sources covered by the dtype / recompile / donation rules.
 ENGINE_DIRS = ("src/repro/core", "src/repro/kernels")
@@ -67,6 +79,20 @@ _JIT_NAMES = frozenset({"jax.jit", "jit"})
 _PALLAS_NAMES = frozenset({"pl.pallas_call", "pallas.pallas_call",
                            "pallas_call",
                            "jax.experimental.pallas.pallas_call"})
+
+# Host-callback entry points (callback-purity).  Matched on the dotted
+# call name, so both `jax.debug.print` and a `from jax import debug`
+# alias (`debug.print`) are caught.
+_CALLBACK_NAMES = frozenset({
+    "io_callback", "jax.experimental.io_callback",
+    "pure_callback", "jax.pure_callback",
+    "jax.debug.print", "debug.print",
+    "jax.debug.callback", "debug.callback",
+    "host_callback.call", "jax.experimental.host_callback.call",
+})
+
+# The flight recorder package is the sanctioned host-callback home.
+OBS_EXEMPT_PREFIX = "src/repro/obs"
 
 
 def in_engine_dirs(rel_path: str) -> bool:
@@ -493,6 +519,36 @@ def check_donation_safety(files: Sequence[SourceFile]) -> List[Violation]:
 
 
 # ---------------------------------------------------------------------------
+# callback-purity
+# ---------------------------------------------------------------------------
+
+def in_callback_scope(rel_path: str) -> bool:
+    """Engine sources minus ``repro.obs`` (the sanctioned exemption)."""
+    return (in_engine_dirs(rel_path)
+            and not rel_path.startswith(OBS_EXEMPT_PREFIX))
+
+
+def check_callback_purity(files: Sequence[SourceFile]) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in files:
+        attach_parents(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func) or ""
+            if name not in _CALLBACK_NAMES:
+                continue
+            out.append(Violation(
+                rule="callback-purity", path=sf.rel_path,
+                line=node.lineno, scope=scope_of(node), code=name,
+                message=(f"host callback `{name}` in engine code — it "
+                         "de-jits the replay hot path; pure in-carry "
+                         "accumulators and host-side spans live in "
+                         "repro.obs (the only sanctioned location)")))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -502,6 +558,7 @@ RULES = {
     "dtype-discipline": (check_dtype_discipline, in_engine_dirs),
     "recompile-hazard": (check_recompile_hazard, in_engine_dirs),
     "donation-safety": (check_donation_safety, in_engine_dirs),
+    "callback-purity": (check_callback_purity, in_callback_scope),
 }
 
 
