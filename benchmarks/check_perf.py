@@ -1,92 +1,116 @@
-"""CI perf gate: compare a fresh BENCH_batched_engine.json to a baseline.
+"""CI perf gate: compare fresh bench JSONs to committed baselines.
 
-    python benchmarks/check_perf.py NEW BASELINE [--tol 0.30]
-                                                 [--rss-tol 0.30]
+    python benchmarks/check_perf.py NEW BASELINE [NEW2 BASELINE2 ...]
+                                    [--tol 0.30] [--rss-tol 0.30]
+                                    [--telemetry-tol 0.05]
 
-Fails (exit 1) when any of:
-  * ``decisions_match`` is false (batched engine diverged from the
-    sequential reference);
-  * ``sharded_decisions_match`` is false (shard_map path diverged —
-    ``null``/absent means the run had one device and is not gated);
-  * ``chunked_decisions_match`` is false (chunk-streaming replay
-    diverged from the unchunked scan — absent means not measured);
-  * any rung's ``compile_amortization_ratio`` exceeds 0.05 (a second
-    trace from an already-seen bucket recompiled);
-  * the run measured in-scan telemetry (``telemetry.enabled``) and
-    either its decisions diverged from telemetry-off or its
-    ``overhead_ratio`` exceeds ``--telemetry-tol`` (default 5%, env
-    ``PERF_TELEMETRY_TOL``); a run without telemetry (``REPRO_OBS``
-    unset) is *skipped* with an explicit reason, never failed;
-  * the base rung's ``batched_events_per_sec`` regressed more than
-    ``--tol`` (default 30%, env ``PERF_REGRESS_TOL``) vs the baseline;
-  * any rung present in BOTH files regressed its ``peak_rss_bytes`` by
-    more than ``--rss-tol`` (default 30%, env ``PERF_RSS_TOL``) — the
-    memory-path twin of the events/sec gate.
+Accepts any number of ``(current, baseline)`` file pairs in one
+invocation and prints a per-file gate summary.  Each file is dispatched
+on its ``bench`` key:
 
-Rungs are matched by name: a rung that exists only in the new file (the
-ladder grew) or only in the baseline (a different ``BENCH_LADDER``) is
-skipped, never an error — the ladder must be able to grow per PR
-without breaking the gate.  Every such skip is *reported* with its
-reason (``perf gate: skipping rung ...``) so a silently-shrunk ladder
-is visible in the CI log instead of passing as an empty comparison.  Throughput is only gated downward and RSS
-only upward — faster/leaner is always fine.  No imports beyond the
-stdlib, so the gate itself can never perturb the numbers.
+``serve_latency`` (``BENCH_serve.json``):
+  * ``decisions_match`` false — the online micro-batched service
+    diverged from the offline replay of the same arrival order
+    (**correctness**);
+  * ``p99_ms`` regressed upward more than ``--tol`` vs the baseline
+    (**perf**; faster is always fine).  Throughput
+    (``arrivals_per_sec``) is reported, not gated — it tracks p99
+    inversely and double-gating one measurement flakes twice.
+
+engine ladder (``BENCH_batched_engine.json`` — no ``bench`` key):
+  * ``decisions_match`` / ``sharded_decisions_match`` /
+    ``chunked_decisions_match`` false, or a telemetry-on replay that
+    changed decisions (**correctness**);
+  * base-rung ``batched_events_per_sec`` down more than ``--tol``, any
+    shared rung's ``peak_rss_bytes`` up more than ``--rss-tol``, any
+    rung's ``compile_amortization_ratio`` above 0.05, or measured
+    telemetry overhead above ``--telemetry-tol`` (**perf**).  A run
+    without telemetry (``REPRO_OBS`` unset) skips that gate with a
+    printed reason, never fails.  Rungs are matched by name; a rung
+    present in only one file is skipped *and reported*, so ladder
+    growth never breaks the gate and a silently-shrunk ladder is
+    visible in the CI log.
+
+Exit codes (distinct, so CI can route failures):
+  0   all gates passed
+  1   perf-only regressions (throughput/RSS/latency/overhead)
+  2   any correctness failure (decision divergence — never a flake)
+  64  usage error (odd number of positionals, unreadable file)
+
+No imports beyond the stdlib, so the gate itself can never perturb the
+numbers.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 AMORTIZE_MAX_RATIO = 0.05
 TELEMETRY_MAX_OVERHEAD = 0.05
 
+EXIT_OK = 0
+EXIT_PERF = 1
+EXIT_CORRECTNESS = 2
+EXIT_USAGE = 64
 
-def check(new: dict, base: dict, tol: float,
-          rss_tol: float = 0.30,
-          telemetry_tol: float = TELEMETRY_MAX_OVERHEAD) -> tuple:
-    """Returns ``(errors, skips)``: gate failures, and per-rung
-    skip-reason strings for rungs that could not be compared."""
+CORRECTNESS, PERF = "correctness", "perf"
+
+
+def check_engine(new: dict, base: dict, tol: float,
+                 rss_tol: float = 0.30,
+                 telemetry_tol: float = TELEMETRY_MAX_OVERHEAD) -> tuple:
+    """Gate a batched-engine ladder file.  Returns ``(errors, skips)``
+    where errors are ``(category, message)`` tuples."""
     errors = []
     skips = []
     if not new.get("decisions_match", False):
-        errors.append("decisions_match is false: batched replay diverged "
-                      "from the sequential engine")
+        errors.append((CORRECTNESS,
+                       "decisions_match is false: batched replay "
+                       "diverged from the sequential engine"))
     tel = new.get("telemetry") or {}
     if tel.get("enabled"):
         if tel.get("decisions_match") is False:
-            errors.append(
-                "telemetry.decisions_match is false: the telemetry-on "
-                "replay diverged from telemetry-off — the in-scan plane "
-                "must be decision-neutral")
+            errors.append((CORRECTNESS,
+                           "telemetry.decisions_match is false: the "
+                           "telemetry-on replay diverged from "
+                           "telemetry-off — the in-scan plane must be "
+                           "decision-neutral"))
         ratio = tel.get("overhead_ratio")
         if ratio is not None and ratio > telemetry_tol:
-            errors.append(
-                f"telemetry overhead {ratio * 100:.1f}% > "
-                f"{telemetry_tol:.0%} budget (telemetry-on "
-                f"{tel.get('telemetry_on_us', 0):.0f} us vs off "
-                f"{tel.get('telemetry_off_us', 0):.0f} us)")
+            errors.append((PERF,
+                           f"telemetry overhead {ratio * 100:.1f}% > "
+                           f"{telemetry_tol:.0%} budget (telemetry-on "
+                           f"{tel.get('telemetry_on_us', 0):.0f} us vs "
+                           f"off {tel.get('telemetry_off_us', 0):.0f} "
+                           "us)"))
     else:
         skips.append(
             "skipping telemetry-overhead gate: obs was off for this run "
             "(REPRO_OBS unset) — no on-vs-off timing was measured")
     if new.get("sharded_decisions_match") is False:
-        errors.append("sharded_decisions_match is false: shard_map replay "
-                      f"diverged ({new.get('sharded')})")
+        errors.append((CORRECTNESS,
+                       "sharded_decisions_match is false: shard_map "
+                       f"replay diverged ({new.get('sharded')})"))
     if new.get("chunked_decisions_match") is False:
-        errors.append("chunked_decisions_match is false: chunk-streaming "
-                      "replay diverged from the unchunked scan")
+        errors.append((CORRECTNESS,
+                       "chunked_decisions_match is false: "
+                       "chunk-streaming replay diverged from the "
+                       "unchunked scan"))
     base_rungs = {r.get("rung"): r for r in base.get("ladder", [])}
     for rung in new.get("ladder", []):
         ratio = rung.get("compile_amortization_ratio")
         if ratio is not None and ratio > AMORTIZE_MAX_RATIO:
-            errors.append(
-                f"rung {rung['rung']}: warm-bucket compile ratio "
-                f"{ratio:.3f} > {AMORTIZE_MAX_RATIO} — the compile cache "
-                "missed on an already-seen bucket")
+            errors.append((PERF,
+                           f"rung {rung['rung']}: warm-bucket compile "
+                           f"ratio {ratio:.3f} > {AMORTIZE_MAX_RATIO} — "
+                           "the compile cache missed on an already-seen "
+                           "bucket"))
         if rung.get("chunked_matches_unchunked") is False:
-            errors.append(f"rung {rung['rung']}: chunked replay output "
-                          "differs from the unchunked scan")
+            errors.append((CORRECTNESS,
+                           f"rung {rung['rung']}: chunked replay output "
+                           "differs from the unchunked scan"))
         prior = base_rungs.get(rung.get("rung"))
         if prior is None:
             skips.append(
@@ -97,11 +121,12 @@ def check(new: dict, base: dict, tol: float,
         new_rss = rung.get("peak_rss_bytes") or 0
         base_rss = prior.get("peak_rss_bytes") or 0
         if base_rss > 0 and new_rss > (1.0 + rss_tol) * base_rss:
-            errors.append(
-                f"rung {rung['rung']}: peak RSS regressed "
-                f"{(new_rss / base_rss - 1) * 100:.0f}% "
-                f"({base_rss / 1e6:.0f} MB -> {new_rss / 1e6:.0f} MB; "
-                f"tolerance {rss_tol:.0%})")
+            errors.append((PERF,
+                           f"rung {rung['rung']}: peak RSS regressed "
+                           f"{(new_rss / base_rss - 1) * 100:.0f}% "
+                           f"({base_rss / 1e6:.0f} MB -> "
+                           f"{new_rss / 1e6:.0f} MB; tolerance "
+                           f"{rss_tol:.0%})"))
     new_rungs = {r.get("rung") for r in new.get("ladder", [])}
     for name in base_rungs:
         if name not in new_rungs:
@@ -112,17 +137,74 @@ def check(new: dict, base: dict, tol: float,
     new_eps = new.get("batched_events_per_sec", 0.0)
     base_eps = base.get("batched_events_per_sec", 0.0)
     if base_eps > 0 and new_eps < (1.0 - tol) * base_eps:
-        errors.append(
-            f"events/sec regressed {(1 - new_eps / base_eps) * 100:.0f}% "
-            f"({base_eps:.0f} -> {new_eps:.0f}; tolerance {tol:.0%})")
+        errors.append((PERF,
+                       "events/sec regressed "
+                       f"{(1 - new_eps / base_eps) * 100:.0f}% "
+                       f"({base_eps:.0f} -> {new_eps:.0f}; tolerance "
+                       f"{tol:.0%})"))
     return errors, skips
 
 
+def check_serve(new: dict, base: dict, tol: float) -> tuple:
+    """Gate a serve_latency file.  Returns ``(errors, skips)``."""
+    errors = []
+    skips = []
+    if not new.get("decisions_match", False):
+        errors.append((CORRECTNESS,
+                       "decisions_match is false: online micro-batched "
+                       "decisions diverged from the offline replay of "
+                       "the same arrival order"))
+    new_p99 = new.get("p99_ms", 0.0)
+    base_p99 = base.get("p99_ms", 0.0)
+    if base_p99 > 0 and new_p99 > (1.0 + tol) * base_p99:
+        errors.append((PERF,
+                       "p99 decision latency regressed "
+                       f"{(new_p99 / base_p99 - 1) * 100:.0f}% "
+                       f"({base_p99:.2f} ms -> {new_p99:.2f} ms; "
+                       f"tolerance {tol:.0%})"))
+    elif base_p99 <= 0:
+        skips.append("skipping p99 gate: baseline has no p99_ms "
+                     "(first run — gated once a baseline is committed)")
+    deg = new.get("degradation") or {}
+    if deg and deg.get("switches", 0) < 1:
+        errors.append((CORRECTNESS,
+                       "degradation pass recorded no governor switch — "
+                       "the unmeetable-SLO ladder must degrade"))
+    return errors, skips
+
+
+def check(new: dict, base: dict, tol: float, rss_tol: float = 0.30,
+          telemetry_tol: float = TELEMETRY_MAX_OVERHEAD) -> tuple:
+    """Dispatch one (new, baseline) pair on its ``bench`` kind."""
+    if new.get("bench") == "serve_latency":
+        return check_serve(new, base, tol)
+    return check_engine(new, base, tol, rss_tol, telemetry_tol)
+
+
+def _summary_line(new: dict, base: dict) -> str:
+    if new.get("bench") == "serve_latency":
+        return (f"p99_ms={new.get('p99_ms', 0.0):.2f} "
+                f"(baseline {base.get('p99_ms', 0.0):.2f}), "
+                f"arrivals/sec={new.get('arrivals_per_sec', 0.0):.0f}, "
+                f"decisions_match={new.get('decisions_match')}, "
+                f"degradation_switches="
+                f"{(new.get('degradation') or {}).get('switches')}")
+    tel = new.get("telemetry") or {}
+    tel_desc = (f"{tel.get('overhead_ratio', 0.0) * 100:+.1f}%"
+                if tel.get("enabled") else "off")
+    return (f"events/sec={new.get('batched_events_per_sec', 0.0):.0f} "
+            f"(baseline "
+            f"{base.get('batched_events_per_sec', 0.0):.0f}), "
+            f"decisions_match={new.get('decisions_match')}, "
+            f"sharded={new.get('sharded_decisions_match')}, "
+            f"chunked={new.get('chunked_decisions_match')}, "
+            f"telemetry={tel_desc}")
+
+
 def main() -> None:
-    import os
     ap = argparse.ArgumentParser()
-    ap.add_argument("new")
-    ap.add_argument("baseline")
+    ap.add_argument("files", nargs="+",
+                    help="alternating NEW BASELINE pairs")
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("PERF_REGRESS_TOL",
                                                  "0.30")))
@@ -134,27 +216,42 @@ def main() -> None:
                         "PERF_TELEMETRY_TOL",
                         str(TELEMETRY_MAX_OVERHEAD))))
     args = ap.parse_args()
-    with open(args.new) as f:
-        new = json.load(f)
-    with open(args.baseline) as f:
-        base = json.load(f)
-    errors, skips = check(new, base, args.tol, args.rss_tol,
-                          args.telemetry_tol)
-    eps = new.get("batched_events_per_sec", 0.0)
-    tel = new.get("telemetry") or {}
-    tel_desc = (f"{tel.get('overhead_ratio', 0.0) * 100:+.1f}%"
-                if tel.get("enabled") else "off")
-    print(f"perf gate: events/sec={eps:.0f} "
-          f"(baseline {base.get('batched_events_per_sec', 0.0):.0f}), "
-          f"decisions_match={new.get('decisions_match')}, "
-          f"sharded={new.get('sharded_decisions_match')}, "
-          f"chunked={new.get('chunked_decisions_match')}, "
-          f"telemetry={tel_desc}")
-    for s in skips:
-        print(f"perf gate: {s}")
-    for e in errors:
-        print(f"PERF GATE FAILURE: {e}", file=sys.stderr)
-    sys.exit(1 if errors else 0)
+    if len(args.files) % 2 != 0:
+        print("usage error: expected alternating NEW BASELINE pairs, "
+              f"got {len(args.files)} paths", file=sys.stderr)
+        sys.exit(EXIT_USAGE)
+
+    any_perf = False
+    any_correctness = False
+    for new_path, base_path in zip(args.files[::2], args.files[1::2]):
+        try:
+            with open(new_path) as f:
+                new = json.load(f)
+            with open(base_path) as f:
+                base = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"usage error: cannot read pair ({new_path}, "
+                  f"{base_path}): {e}", file=sys.stderr)
+            sys.exit(EXIT_USAGE)
+        errors, skips = check(new, base, args.tol, args.rss_tol,
+                              args.telemetry_tol)
+        kind = new.get("bench", "batched_engine")
+        n_corr = sum(1 for c, _ in errors if c == CORRECTNESS)
+        n_perf = len(errors) - n_corr
+        verdict = ("PASS" if not errors else
+                   f"FAIL ({n_corr} correctness, {n_perf} perf)")
+        print(f"perf gate [{kind}] {new_path}: {verdict} — "
+              f"{_summary_line(new, base)}")
+        for s in skips:
+            print(f"perf gate [{kind}]: {s}")
+        for cat, e in errors:
+            print(f"PERF GATE FAILURE [{kind}/{cat}]: {e}",
+                  file=sys.stderr)
+        any_perf = any_perf or n_perf > 0
+        any_correctness = any_correctness or n_corr > 0
+    if any_correctness:
+        sys.exit(EXIT_CORRECTNESS)
+    sys.exit(EXIT_PERF if any_perf else EXIT_OK)
 
 
 if __name__ == "__main__":

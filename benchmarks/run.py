@@ -15,7 +15,8 @@ consolidation_sweep (Fig. 9), acceptance (Fig. 10-11),
 active_hardware (Fig. 12 / Table 6), migrations (§8.3.3),
 ilp_gap (§6 oracle vs all policies, homogeneous + mixed fleets),
 adaptive (online basket-capacity control),
-kernel_throughput + batched_engine + hetero_sweep (beyond-paper).
+kernel_throughput + batched_engine + hetero_sweep (beyond-paper),
+serve_latency (online placement-service SLO surface).
 The roofline table is produced separately by repro.launch.roofline
 (needs a fresh process for the 512-device XLA flag).
 """
@@ -37,6 +38,7 @@ MODULES = [
     "kernel_throughput",
     "batched_engine",
     "hetero_sweep",
+    "serve_latency",
 ]
 
 # tcmalloc beats glibc malloc on XLA's allocation-heavy host paths

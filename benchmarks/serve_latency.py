@@ -1,0 +1,153 @@
+"""Online placement-service latency/throughput benchmark.
+
+Streams a flash-crowd arrival trace (``repro.workload.flashcrowd``:
+Poisson base rate with a burst-window multiplier) through
+``repro.serve.PlacementService`` and measures the serving-path SLO
+surface:
+
+  * p50/p99 **decision latency** (submit -> decision ready, per arrival)
+    and sustained **arrivals/sec** over the whole stream, measured on a
+    *warm* service — a throwaway service with identical statics + shapes
+    runs first so the measured run reflects compile-once/serve-many
+    steady state, exactly what an online deployment sees;
+  * **offline parity**: the same arrival order replayed through the
+    offline batched engine must produce bit-identical accepted-VM
+    sequences (``decisions_match`` — a correctness gate in
+    ``benchmarks/check_perf.py``, not a perf gate);
+  * **degradation occupancy**: a second pass with a ``GRMU -> FF``
+    ladder and an unmeetable SLO pins the governor's switch machinery
+    and reports per-tier decision occupancy.
+
+Writes ``BENCH_serve.json`` (override: ``BENCH_SERVE_JSON``) with the
+legacy-style top-level gate keys plus a per-PR ``history`` list (git
+sha, p99, arrivals/sec), preserving prior entries — the same trajectory
+convention as ``BENCH_batched_engine.json``.  CI sizes the run via
+``SERVE_VMS`` / ``SERVE_GPUS`` / ``SERVE_BATCH``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+
+import numpy as np
+
+from repro.core import batched as B
+from repro.core import compile_cache
+from repro.core.bucketing import pad_events
+from repro.serve import PlacementService, ServeConfig, requests_from_trace
+from repro.workload.flashcrowd import FlashCrowdConfig, generate_flash_crowd
+
+from .common import emit
+
+N_VMS = int(os.environ.get("SERVE_VMS", "2000"))
+N_GPUS = int(os.environ.get("SERVE_GPUS", "64"))
+MICRO_BATCH = int(os.environ.get("SERVE_BATCH", "64"))
+HORIZON = float(os.environ.get("SERVE_HORIZON", "96"))
+OUT_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _load_history(path: str) -> list:
+    try:
+        with open(path) as f:
+            return json.load(f).get("history", [])
+    except (OSError, json.JSONDecodeError):
+        return []
+
+
+def _stream(svc: PlacementService, reqs, horizon: float) -> float:
+    """Push the whole request stream with backpressure; returns wall s."""
+    t0 = time.perf_counter()
+    for r in reqs:
+        while not svc.submit(r):
+            svc.drain(max_batches=1)
+    svc.drain()
+    svc.flush(horizon)
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    compile_cache.ensure_persistent_cache()
+    fc = FlashCrowdConfig(n_vms=N_VMS, n_gpus=N_GPUS,
+                          horizon_hours=HORIZON, seed=2)
+    events = generate_flash_crowd(fc)
+    reqs, horizon = requests_from_trace(events)
+    cfg = ServeConfig(policy="GRMU", micro_batch=MICRO_BATCH)
+
+    # Warm-up service: same statics + capacity shapes -> the measured
+    # service below reuses every compiled executable (serve-many).
+    warm = PlacementService.for_trace(events, cfg)
+    _stream(warm, reqs, horizon)
+
+    svc = PlacementService.for_trace(events, cfg)
+    wall = _stream(svc, reqs, horizon)
+    lats = np.array([d.latency_s for d in svc.decisions.values()])
+    p50_ms = float(np.percentile(lats, 50.0)) * 1e3
+    p99_ms = float(np.percentile(lats, 99.0)) * 1e3
+    aps = len(lats) / wall
+    emit("serve.decision_latency", float(lats.mean()) * 1e6,
+         f"p50_ms={p50_ms:.3f} p99_ms={p99_ms:.3f}")
+    emit("serve.throughput", wall * 1e6 / max(len(lats), 1),
+         f"arrivals_per_sec={aps:.0f} n={len(lats)}")
+
+    # Offline parity: identical arrival order through the offline engine.
+    res = B.replay(pad_events(events), B.GRMU)
+    decisions_match = svc.accepted_ids() == list(res.accepted_ids)
+    emit("serve.offline_parity", 0.0,
+         f"match={int(decisions_match)} accepted={svc.stats()['accepted']}")
+
+    # Degradation pass: unmeetable SLO forces GRMU -> FF on the first
+    # governed batch; occupancy fractions pin the governed split.
+    dcfg = ServeConfig(policy="GRMU", tiers=("GRMU", "FF"),
+                       micro_batch=MICRO_BATCH, slo_s=0.0)
+    dsvc = PlacementService.for_trace(events, dcfg)
+    _stream(dsvc, reqs, horizon)
+    occ = dsvc.tier_occupancy
+    total = max(sum(occ.values()), 1)
+    degradation = {
+        "tiers": list(dcfg.tiers),
+        "slo_ms": dcfg.slo_s * 1e3,
+        "switches": len(dsvc.switch_events),
+        "final_tier": dsvc.tier_name,
+        "occupancy": {k: v / total for k, v in occ.items()},
+    }
+    emit("serve.degradation", 0.0,
+         f"switches={degradation['switches']} "
+         f"ff_frac={degradation['occupancy'].get('FF', 0.0):.3f}")
+
+    history = _load_history(OUT_PATH)
+    history.append({"sha": _git_sha(), "p99_ms": p99_ms,
+                    "arrivals_per_sec": aps, "n_vms": N_VMS,
+                    "n_gpus": N_GPUS, "micro_batch": MICRO_BATCH})
+    with open(OUT_PATH, "w") as f:
+        json.dump({
+            "bench": "serve_latency",
+            "n_vms": N_VMS, "n_gpus": N_GPUS,
+            "micro_batch": svc._batch_rows,
+            "n_requests": len(reqs),
+            "wall_s": wall,
+            "p50_ms": p50_ms, "p99_ms": p99_ms,
+            "arrivals_per_sec": aps,
+            "accepted_online": int(svc.stats()["accepted"]),
+            "accepted_offline": int(res.accepted),
+            "decisions_match": decisions_match,
+            "queue_high_watermark": svc.queue.high_watermark,
+            "degradation": degradation,
+            "compile_cache": compile_cache.cache_stats(),
+            "history": history,
+        }, f, indent=2)
+    print(f"# wrote {OUT_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,18 +1,46 @@
-"""End-to-end driver (the paper's kind: serving/placement): GRMU admits a
-stream of inference requests onto pod slices, then the framework serves
-the admitted batch with a real model decode loop.
+"""Minimal online-placement example: stream arrivals through
+``PlacementService`` with a GRMU -> FF degradation ladder.
 
-    PYTHONPATH=src python examples/serve_with_grmu.py \
-        [--arch tinyllama-1.1b] [--requests 64] [--tokens 24]
+    PYTHONPATH=src python examples/serve_with_grmu.py
+
+For the full driver (flash-crowd load, SLO knobs, checkpointing,
+flight-recorder output) use ``python -m repro.launch.serve --smoke``.
 """
-import sys
+from repro.core import batched as B
+from repro.core.bucketing import pad_events
+from repro.serve import PlacementService, ServeConfig, requests_from_trace
+from repro.workload.flashcrowd import FlashCrowdConfig, generate_flash_crowd
 
-from repro.launch.serve import main
+
+def main() -> None:
+    # A small flash crowd: 300 VMs on a 16-GPU homogeneous A100 fleet,
+    # with a 6x arrival burst mid-trace.
+    events = generate_flash_crowd(FlashCrowdConfig(
+        n_vms=300, n_gpus=16, horizon_hours=48.0, seed=0))
+    reqs, horizon = requests_from_trace(events)
+
+    svc = PlacementService.for_trace(events, ServeConfig(
+        tiers=("GRMU", "FF"),   # degrade GRMU -> FF on SLO breach
+        micro_batch=32, slo_s=0.050))
+
+    for r in reqs:
+        while not svc.submit(r):     # full queue: shed one batch, retry
+            svc.drain(max_batches=1)
+    svc.drain()
+    svc.flush(horizon)
+
+    st = svc.stats()
+    print(f"{st['decisions']} decisions, {st['accepted']} accepted; "
+          f"p50={st['p50_ms']:.2f}ms p99={st['p99_ms']:.2f}ms; "
+          f"tier={svc.tier_name} switches={st['switches']}")
+
+    # The serving-layer contract: with a single-policy ladder the online
+    # decisions are bit-identical to an offline replay of this order.
+    if not svc.switch_events:
+        res = B.replay(pad_events(events), B.GRMU)
+        print("online == offline:",
+              svc.accepted_ids() == list(res.accepted_ids))
+
 
 if __name__ == "__main__":
-    argv = sys.argv[1:]
-    if not any(a.startswith("--arch") for a in argv):
-        argv = ["--arch", "tinyllama-1.1b"] + argv
-    if "--smoke" not in argv:
-        argv.append("--smoke")
-    sys.exit(main(argv))
+    main()

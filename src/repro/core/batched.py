@@ -948,6 +948,46 @@ def _jitted_run(st: ReplayStatics) -> Callable:
     return compile_cache.cached_replay_fn(st, build)
 
 
+def make_decision_step(st: ReplayStatics) -> Callable:
+    """The online placement service's micro-batch decision kernel: one
+    donating jitted pass of :func:`_scan_body` over a fixed-size slice of
+    event rows, returning ``(final carry, vmrow rows gathered at
+    batch_vi)`` so the service can read each arrival's (gpu, start,
+    accepted) decision without pulling the whole carry off device.
+
+    Compile-once / serve-many: the function is cached per statics value
+    (``(st, "serve-step")`` in the replay compile cache) and XLA's jit
+    cache then keys one executable per (batch, state-bucket) shape — a
+    service processes millions of requests through a single compile.
+    Because ``_scan_body`` is position-independent, a stream of
+    micro-batches computes exactly the single-scan fixpoint: decisions
+    are bit-identical to an offline replay of the same event order for
+    any batch size (tests/test_serve.py).
+
+    ``batch_vi`` carries the dense VM index per batch row (the padded-VM
+    count as a sentinel for non-arrival rows — the gather clamps, and the
+    service ignores those rows).  The carry is donated: callers must
+    treat the passed state as consumed, exactly like ``init_state``'s
+    donation invariant."""
+    if st.telemetry:
+        raise ValueError("the serving decision step does not support "
+                         "in-scan telemetry statics")
+    compile_cache.ensure_persistent_cache()
+    # Materialize the fleet's jnp tables eagerly: constructing them for
+    # the first time *inside* the jit trace would cache tracers
+    # (offline replay warms this via init_state; the service must too).
+    pc.tables_for(jnp, st.models)
+
+    def build():
+        def step(state, ev, rest, heavy_capacity, batch_vi):
+            final = _scan_body(st, state, dict(rest, **ev),
+                               heavy_capacity)
+            return final, final["vmrow"][batch_vi]
+        return jax.jit(step, donate_argnums=(0,))
+
+    return compile_cache.cached_replay_fn((st, "serve-step"), build)
+
+
 def default_heavy_capacity(events: EventTrace,
                            frac: float = 0.30) -> int:
     # Same rounding as the sequential GRMU constructor (no floor), so a
@@ -1058,7 +1098,8 @@ def sweep_heavy_capacity(events: EventTrace, fracs: np.ndarray,
 
 
 __all__ = ["EventTrace", "build_events", "build_events_arrays",
-           "make_replay", "replay", "result_from_arrays",
+           "make_replay", "make_decision_step", "replay",
+           "result_from_arrays",
            "sweep_heavy_capacity", "default_heavy_capacity",
            "trace_arrays", "init_state", "replay_statics",
            "ReplayStatics", "step_grid", "EVENT_KEYS",

@@ -136,10 +136,18 @@ def restore_latest(ckpt_dir: str, like: Any
         flat_like = jax.tree.leaves(like)
         if len(flat_like) != len(leaves):
             continue                      # structure changed -> unusable
+        def _cast(raw, like_leaf):
+            # jax leaves go back to device at the like dtype; host
+            # (numpy) leaves stay numpy — jnp would silently truncate
+            # int64/float64 under the default x64-disabled config,
+            # corrupting host-side state (e.g. the placement service's
+            # vm_ids / float64 step clock).
+            if isinstance(like_leaf, jax.Array):
+                return jax.numpy.asarray(raw).astype(like_leaf.dtype)
+            return np.asarray(raw).astype(np.asarray(like_leaf).dtype)
+
         restored = jax.tree.unflatten(
-            treedef,
-            [jax.numpy.asarray(a).astype(l.dtype)
-             for a, l in zip(leaves, flat_like)])
+            treedef, [_cast(a, l) for a, l in zip(leaves, flat_like)])
         return manifest["step"], restored
     return None
 

@@ -27,7 +27,7 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config
 from ..models.config import SHAPES
 from ..models import registry as R
-from ..serve import engine as serve_engine
+from ..serve import llm_decode as serve_engine
 from .mesh import make_production_mesh
 from . import sharding as SH
 from jax.sharding import NamedSharding, PartitionSpec as PS

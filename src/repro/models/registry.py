@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
-from ..serve import engine as serve_engine
+from ..serve import llm_decode as serve_engine
 from ..train.optimizer import AdamWConfig, adamw_init
 from ..train.step import make_train_step
 from .config import SHAPES, ModelConfig, ShapeConfig

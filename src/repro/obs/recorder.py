@@ -22,6 +22,10 @@ Every line in the JSONL file is one record with ``schema`` (the
   ``cache``      compile-cache hits/misses/evictions/entries snapshot
   ``result``     a SimResult summary + rejection-reason tally
   ``telemetry``  a full ``ReplayTelemetry`` payload (in-scan plane)
+  ``service``    a placement-service control-plane event (admission
+                 governor tier switches, checkpoint/restore) — emitted
+                 by ``repro.serve.placement`` alongside ``serve.batch``
+                 spans
 
 Spans measure *dispatch* wall-clock: jax executes asynchronously, so a
 chunk-step span is the host-side cost of submitting (and, under donation
@@ -101,6 +105,12 @@ class Recorder:
     def telemetry(self, tele) -> None:
         """Record a full in-scan ``ReplayTelemetry`` payload."""
         self.emit("telemetry", **tele.to_json_dict())
+
+    def service(self, event: str, **fields) -> None:
+        """Record a placement-service control-plane event (``kind=
+        "service"``): governor tier switches, checkpoint/restore marks.
+        ``event`` names the transition (e.g. ``degrade``/``recover``)."""
+        self.emit("service", event=event, **fields)
 
     def close(self) -> None:
         if self._tracing:

@@ -1,0 +1,12 @@
+"""Online placement serving layer: bounded request queue, micro-batched
+decision kernel over the batched replay engine, admission governor with
+graceful degradation, and checkpoint/restore (see ``placement``)."""
+from .placement import (Decision, Governor, ILP_TIER, PlacementService,
+                        ServeConfig, requests_from_trace)
+from .queue import (Arrival, BoundedRequestQueue, Departure, Request,
+                    arrival_bucket, departure_bucket)
+
+__all__ = ["PlacementService", "ServeConfig", "Decision", "Governor",
+           "ILP_TIER", "requests_from_trace", "Arrival", "Departure",
+           "Request", "BoundedRequestQueue", "arrival_bucket",
+           "departure_bucket"]

@@ -1,4 +1,11 @@
-"""Serving: prefill + single-token decode with per-family caches.
+"""LLM inference decode (prefill + single-token step) — **not** the
+placement serving layer.
+
+This is the seed-era model-decode path kept for the architecture-zoo
+demos (``repro.models.registry`` forward modes, ``launch.dryrun``); the
+paper's online placement service — queue, micro-batched decision kernel,
+admission governor — lives in ``repro.serve.placement`` and is driven by
+``python -m repro.launch.serve``.
 
 Cache layouts (leading 'layers' axis, threaded through the decode scan):
   attention families — {'k','v'}: (L, B, S, KV, hd)

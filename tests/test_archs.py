@@ -10,7 +10,7 @@ from repro.models import transformer as M
 from repro.models.config import SHAPES
 from repro.models.registry import (active_param_count, cell_supported,
                                    total_param_count)
-from repro.serve import engine as serve_engine
+from repro.serve import llm_decode as serve_engine
 from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.step import make_train_step
 
